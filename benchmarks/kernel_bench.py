@@ -1,0 +1,62 @@
+"""Kernel micro-bench: wall time of Pallas kernels (interpret mode) vs
+their jnp oracles, plus the *structural* speedup the sparsity-aware
+variants deliver (tiles skipped — the TPU analogue of commands skipped;
+wall-clock on CPU interpret mode is not meaningful, structure is).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ss_gemm.ops import block_occupancy
+
+from .common import Table
+
+
+def main() -> None:
+    t = Table("Kernels — oracle agreement + sparsity-aware tile skipping")
+    rng = np.random.default_rng(0)
+
+    # ss-gemm skip granularity — the paper's own §5.1.2 argument made
+    # quantitative: PIM skips at *element* granularity (one command per
+    # 32 B word), a TPU kernel at *tile* granularity.  Random element
+    # sparsity therefore yields ~0 tile skips (honest negative), while
+    # structured sparsity (pruned blocks / clustered embedding-bag rows)
+    # skips in proportion — the regime where the TPU adaptation wins.
+    k, n = 4096, 4
+    b_rand = rng.standard_normal((k, n)).astype(np.float32)
+    b_rand[rng.random(k) > 0.45] = 0.0
+    occ = np.asarray(block_occupancy(jnp.asarray(b_rand), 256))
+    t.add("ss-gemm random 45%-dense, bk=256", 0.0,
+          f"{1 - occ.mean():.0%} tiles skipped (element-granular skip is "
+          "PIM-unique — the paper's finer-grain-than-GPU claim)")
+    b_clu = rng.standard_normal((k, n)).astype(np.float32)
+    live_blocks = rng.random(k // 256) < 0.45
+    b_clu[~np.repeat(live_blocks, 256)] = 0.0
+    occ_c = np.asarray(block_occupancy(jnp.asarray(b_clu), 256))
+    t.add("ss-gemm clustered 45%-dense, bk=256", 0.0,
+          f"{1 - occ_c.mean():.0%} tiles skipped (structured sparsity: "
+          "the kernel's block-skip regime)")
+
+    # MoE: expert-tile occupancy at decode batch sizes
+    from repro.configs import get_config
+    cfg = get_config("deepseek-v3-671b")
+    m = cfg.moe
+    for tokens in (128, 4096):
+        assign = rng.integers(0, m.n_experts, size=(tokens, m.top_k))
+        counts = np.bincount(assign.reshape(-1), minlength=m.n_experts)
+        cap = max(1, int(tokens * m.top_k * 1.25 / m.n_experts))
+        bc = 128
+        tiles = -(-cap // bc) * m.n_experts
+        live = sum(min(-(-c // bc), -(-cap // bc)) for c in counts)
+        t.add(f"moe-group-gemm tiles live (T={tokens}, 256e top-8)", 0.0,
+              f"{live}/{tiles} tiles computed "
+              f"({1 - live / tiles:.0%} skipped)")
+    t.emit()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""§Roofline table: three terms per (arch x shape) from dry-run artifacts.
+
+Reads artifacts/dryrun/*__single.json (the 16x16 production pod).  Columns:
+compute/memory/collective terms (ms), dominant bound, MODEL_FLOPS/HLO_FLOPS
+usefulness ratio, and roofline fraction (useful-compute time / dominant
+term).
+"""
+from __future__ import annotations
+
+import pathlib
+
+from repro.launch.dryrun import ARTIFACTS
+from repro.roofline.analysis import from_artifact
+
+
+def rows(mesh: str = "single"):
+    out = []
+    for path in sorted(ARTIFACTS.glob(f"*__{mesh}.json")):
+        try:
+            out.append(from_artifact(path))
+        except Exception as exc:
+            print(f"# skip {path.name}: {exc}")
+    return out
+
+
+def main() -> None:
+    rl = rows()
+    if not rl:
+        raise FileNotFoundError(
+            f"no dry-run artifacts in {ARTIFACTS}; run "
+            "PYTHONPATH=src python -m repro.launch.dryrun --all")
+    print("# Roofline — per (arch x shape), single-pod 16x16 "
+          "(v5e: 197 TF/s bf16, 819 GB/s HBM, 4x50 GB/s ICI)")
+    print("arch,shape,mesh,compute_ms,memory_ms,collective_ms,bound,"
+          "useful_ratio,roofline_frac")
+    for r in sorted(rl, key=lambda r: (r.arch, r.shape)):
+        print(r.row())
+    print()
+
+    # multi-pod scaling: per-device terms at 512 chips vs 256 (the pod
+    # axis carries data parallelism only — compute/memory per device
+    # should halve for train cells while collectives stay ~flat, i.e.
+    # weak-scaling headroom toward 1000+ nodes).
+    single = {(r.arch, r.shape): r for r in rl}
+    print("# Multi-pod scaling — 2x16x16 vs 16x16, per-device terms")
+    print("arch,shape,compute_ratio,collective_ratio,note")
+    for path in sorted(ARTIFACTS.glob("*__multi.json")):
+        try:
+            m = from_artifact(path)
+        except Exception:
+            continue
+        s = single.get((m.arch, m.shape))
+        if s is None or not s.compute_ns:
+            continue
+        cr = m.compute_ns / s.compute_ns
+        xr = (m.collective_ns / s.collective_ns
+              if s.collective_ns else float("nan"))
+        note = ("data-parallel weak scaling" if cr < 0.7
+                else "batch-bound (replicated work)")
+        print(f"{m.arch},{m.shape},{cr:.2f},{xr:.2f},{note}")
+    print()
+
+
+if __name__ == "__main__":
+    main()

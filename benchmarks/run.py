@@ -1,0 +1,66 @@
+"""Benchmark driver: one table per paper figure + framework perf tables.
+
+``PYTHONPATH=src python -m benchmarks.run [--fast]``
+
+Prints ``name,us_per_call,derived`` CSV per table.  Paper-anchor rows embed
+the paper's number and our delta.  Framework tables (roofline / planner)
+read the dry-run artifacts if present (see src/repro/launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .common import Table
+from . import (fig6_baseline_pim, fig8_wavesim_opt, fig9_ssgemm_sparsity,
+               fig10_push_cacheaware, headline)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--fast", action="store_true",
+                        help="skip the slower LRU-predictor tables")
+    args = parser.parse_args()
+
+    t = Table("Fig 6 — baseline PIM speedup vs GPU")
+    fig6_baseline_pim.run(t)
+    t.emit()
+
+    t = Table("Fig 8 — wavesim: arch-aware activation x registers")
+    fig8_wavesim_opt.run(t)
+    t.emit()
+
+    t = Table("Fig 9 — ss-gemm: sparsity-aware PIM")
+    fig9_ssgemm_sparsity.run(t)
+    t.emit()
+
+    if not args.fast:
+        t = Table("Fig 10 — push: cache-aware PIM + command bandwidth")
+        fig10_push_cacheaware.run(t)
+        t.emit()
+
+        t = Table("Headline — average PIM speedup, baseline vs optimized")
+        headline.run(t)
+        t.emit()
+
+        from . import limit_studies
+        t = Table("Limit studies — registers x command bandwidth (§5.1.4)")
+        limit_studies.run(t)
+        t.emit()
+
+    # Framework-side tables are emitted if their inputs exist.
+    try:
+        from . import roofline_table
+        roofline_table.main()
+    except Exception as exc:  # dry-run artifacts may not exist yet
+        print(f"# roofline table skipped: {exc}", file=sys.stderr)
+
+    try:
+        from . import kernel_bench
+        kernel_bench.main()
+    except Exception as exc:
+        print(f"# kernel bench skipped: {exc}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""PIM-offload planner over the assigned architectures (paper §3 made
+executable): which ops of each (arch x shape) step are PIM-amenable, the
+estimated strawman-PIM speedup, and the TPU-native action this framework
+takes instead.
+
+  PYTHONPATH=src python examples/offload_planner.py --arch deepseek-v3-671b
+"""
+import argparse
+
+from repro.configs import ALL_ARCHS, get_config, shapes_for
+from repro.core.planner import render
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    args = ap.parse_args()
+    archs = [args.arch] if args.arch else list(ALL_ARCHS)
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape in shapes_for(cfg):
+            print(render(cfg, shape))
+            print()
+
+
+if __name__ == "__main__":
+    main()

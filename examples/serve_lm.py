@@ -1,0 +1,23 @@
+"""Batched serving example: continuous batching over the decode step.
+
+  PYTHONPATH=src python examples/serve_lm.py --arch qwen2-0.5b
+"""
+import argparse
+
+from repro.launch.serve import run
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-new", type=int, default=8)
+    args = ap.parse_args()
+    out = run(args.arch, reduced=True, requests=args.requests,
+              max_new=args.max_new, batch=4, max_len=64)
+    for rid, toks in sorted(out["results"].items()):
+        print(f"request {rid}: {toks}")
+
+
+if __name__ == "__main__":
+    main()

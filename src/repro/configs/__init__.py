@@ -1,0 +1,24 @@
+"""Assigned-architecture registry: ``get_config("<arch-id>")``."""
+from __future__ import annotations
+
+from .base import ArchConfig, ShapeConfig, SHAPES, shapes_for  # noqa: F401
+
+from . import (codeqwen1_5_7b, deepseek_v3_671b, internvl2_26b, mamba2_370m,
+               moonshot_v1_16b_a3b, nemotron_4_15b, qwen2_0_5b,
+               starcoder2_3b, whisper_tiny, zamba2_1_2b)
+
+REGISTRY: dict[str, ArchConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (starcoder2_3b, nemotron_4_15b, qwen2_0_5b, codeqwen1_5_7b,
+              mamba2_370m, internvl2_26b, whisper_tiny, zamba2_1_2b,
+              deepseek_v3_671b, moonshot_v1_16b_a3b)
+}
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+ALL_ARCHS = tuple(sorted(REGISTRY))

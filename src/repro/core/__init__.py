@@ -1,0 +1,18 @@
+"""Inclusive-PIM core: the paper's contribution as an executable model.
+
+- PIM-amenability-test (§3): :mod:`repro.core.amenability`
+- pim-command IR + DRAM timing engine (§4.3.1): :mod:`repro.core.commands`,
+  :mod:`repro.core.timing`
+- GPU baseline + cache models (§4.3.1, §5.2.3): :mod:`repro.core.gpu_model`,
+  :mod:`repro.core.cache_model`
+- placement + schedules + optimizations (§4.2, §5.1):
+  :mod:`repro.core.placement`, :mod:`repro.core.optimizations`
+- primitives under study (§2.3): :mod:`repro.core.primitives`
+- per-op offload planner for compiled LM steps: :mod:`repro.core.planner`
+"""
+
+from .hwspec import DEFAULT_GPU, DEFAULT_PIM, DEFAULT_TPU, GpuSpec, PimSpec, TpuSpec  # noqa: F401
+from .amenability import (  # noqa: F401
+    AmenabilityReport, Interaction, PrimitiveProfile, Verdict, run_test,
+)
+from .timing import TimingStats, simulate  # noqa: F401

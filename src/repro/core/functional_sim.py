@@ -1,0 +1,150 @@
+"""Functional PIM simulator: *executes* broadcast command streams.
+
+The timing engine (repro.core.timing) answers "how long"; this module
+answers "does the orchestration compute the right thing".  It models the
+strawman machine's visible state — per-bank DRAM rows, per-ALU register
+files, an open-row buffer — and executes co-aligned elementwise programs
+(the §4.2.2 class) command by command:
+
+  ACT  (subset, row)        open a row in each bank of the subset
+  LD   (subset, col, reg)   reg[bank] <- open_row[bank][col]
+  OP   (subset, col, reg, fn) reg[bank] <- fn(reg[bank], open_row[bank][col])
+  ST   (subset, col, reg)   open_row[bank][col] <- reg[bank] (write-through)
+
+A program must respect the machine rules (registers per ALU, one open row
+per bank, SIMD width) or the simulator raises — the same constraints the
+paper's orchestration discussion is about.  Tests run the vector-sum
+program produced by :func:`elementwise_program` against jnp oracles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import numpy as np
+
+from .hwspec import PimSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class Cmd:
+    kind: str                  # act | ld | op | st
+    subset: str                # even | odd | all (act only)
+    row: int = 0               # act
+    col: int = 0               # ld/op/st
+    reg: int = 0
+    fn: Callable | None = None
+
+
+class PimMachine:
+    """One pseudo-channel of the strawman machine."""
+
+    def __init__(self, spec: PimSpec | None = None):
+        self.spec = spec or PimSpec()
+        sp = self.spec
+        self.lanes = sp.simd_lanes
+        self.banks = sp.banks_per_pch
+        self.cols = sp.cols_per_row
+        self.rows: dict[tuple[int, int], np.ndarray] = {}
+        self.open_row = [-1] * self.banks
+        # one ALU (register file) per bank *pair*
+        self.regs = np.zeros((self.banks // 2, sp.pim_regs_per_alu,
+                              self.lanes), np.float32)
+
+    # ------------------------------------------------------------------
+    def write_row(self, bank: int, row: int, data: np.ndarray) -> None:
+        assert data.shape == (self.cols, self.lanes)
+        self.rows[(bank, row)] = data.astype(np.float32).copy()
+
+    def read_row(self, bank: int, row: int) -> np.ndarray:
+        return self.rows.setdefault(
+            (bank, row), np.zeros((self.cols, self.lanes), np.float32))
+
+    def _banks(self, subset: str) -> range:
+        if subset == "even":
+            return range(0, self.banks, 2)
+        if subset == "odd":
+            return range(1, self.banks, 2)
+        return range(self.banks)
+
+    # ------------------------------------------------------------------
+    def execute(self, program: Sequence[Cmd]) -> None:
+        sp = self.spec
+        for cmd in program:
+            if cmd.kind == "act":
+                for b in self._banks(cmd.subset):
+                    self.open_row[b] = cmd.row
+                continue
+            if cmd.subset == "all":
+                raise ValueError("compute commands target even/odd subsets")
+            if not 0 <= cmd.reg < sp.pim_regs_per_alu:
+                raise ValueError(f"register {cmd.reg} out of range")
+            for b in self._banks(cmd.subset):
+                if self.open_row[b] < 0:
+                    raise RuntimeError(f"bank {b}: no open row")
+                row = self.read_row(b, self.open_row[b])
+                alu = b // 2
+                if cmd.kind == "ld":
+                    self.regs[alu, cmd.reg] = row[cmd.col]
+                elif cmd.kind == "op":
+                    self.regs[alu, cmd.reg] = cmd.fn(
+                        self.regs[alu, cmd.reg], row[cmd.col])
+                elif cmd.kind == "st":
+                    row[cmd.col] = self.regs[alu, cmd.reg]
+                else:
+                    raise ValueError(cmd.kind)
+
+
+# ---------------------------------------------------------------------------
+# co-aligned elementwise programs (§4.2.2)
+# ---------------------------------------------------------------------------
+
+def place_coaligned(machine: PimMachine, arrays: dict[int, np.ndarray]):
+    """Place equal-length arrays co-aligned: element i of every array in
+    the same (bank, col, lane); array r lives in row r.  Returns the
+    number of (col-chunk) iterations a program needs."""
+    n = len(next(iter(arrays.values())))
+    per_bank = machine.cols * machine.lanes
+    need = machine.banks * per_bank
+    if n > need:
+        raise ValueError(f"array larger than one row-set ({need})")
+    for row, arr in arrays.items():
+        pad = np.zeros(need, np.float32)
+        pad[:n] = arr
+        for b in range(machine.banks):
+            machine.write_row(
+                b, row, pad[b * per_bank:(b + 1) * per_bank].reshape(
+                    machine.cols, machine.lanes))
+
+
+def gather_coaligned(machine: PimMachine, row: int, n: int) -> np.ndarray:
+    per_bank = machine.cols * machine.lanes
+    out = np.concatenate([machine.read_row(b, row).reshape(-1)
+                          for b in range(machine.banks)])
+    return out[:n]
+
+
+def elementwise_program(spec: PimSpec, in_rows: Sequence[int], out_row: int,
+                        fn: Callable, *, arch_aware: bool = False
+                        ) -> list[Cmd]:
+    """Generate the §4.2.2 schedule: per register-chunk, visit each input
+    row (ld/op) then the output row (st), even/odd interleaved — the same
+    phase structure the timing model charges for."""
+    cols = spec.cols_per_row
+    chunk = max(1, spec.pim_regs_per_alu // 2)
+    program: list[Cmd] = []
+    for c0 in range(0, cols, chunk):
+        cspan = range(c0, min(c0 + chunk, cols))
+        for phase, row in enumerate(list(in_rows) + [out_row]):
+            program.append(Cmd("act", "all", row=row))
+            for subset_i, subset in enumerate(("even", "odd")):
+                for j, col in enumerate(cspan):
+                    reg = subset_i * chunk + j
+                    if phase == 0:
+                        program.append(Cmd("ld", subset, col=col, reg=reg))
+                    elif phase < len(in_rows):
+                        program.append(Cmd("op", subset, col=col, reg=reg,
+                                           fn=fn))
+                    else:
+                        program.append(Cmd("st", subset, col=col, reg=reg))
+    return program

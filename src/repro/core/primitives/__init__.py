@@ -1,0 +1,4 @@
+"""Primitives under study (paper §2.3): functional JAX implementations,
+GPU-baseline byte models, and PIM command-stream generators."""
+
+from . import graphs, push, ss_gemm, vector_sum, wavesim  # noqa: F401

@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, DataPipeline  # noqa: F401

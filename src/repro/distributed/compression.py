@@ -1,0 +1,52 @@
+"""Gradient compression: int8 quantization with error feedback.
+
+Before the optimizer consumes gradients, each leaf is quantized to int8
+with a per-tensor scale; the quantization residual is carried in an error-
+feedback buffer and added back next step (Seide et al. / EF-SGD semantics;
+convergence verified in tests/test_substrate.py and the train-integration
+test).
+
+Scope note (honest accounting): under plain pjit, XLA performs the
+gradient cross-replica reduction inside the backward pass in f32 — this
+module's quantization runs *after* that, so it bounds optimizer-state
+noise but does not shrink wire traffic by itself.  Wire-level int8
+reduction requires owning the collective (per-shard grads inside
+shard_map + a manual quantized psum); that integration is logged as
+§Perf future work alongside the shard_map MoE a2a.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+
+
+def quantize(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(x)) / INT8_MAX + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_leaf(g: jnp.ndarray,
+                  ef: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (decompressed gradient, new error-feedback buffer)."""
+    g32 = g.astype(jnp.float32) + ef.astype(jnp.float32)
+    q, scale = quantize(g32)
+    deq = dequantize(q, scale)
+    return deq, (g32 - deq).astype(ef.dtype)
+
+
+def compress_tree(grads: Any, ef: Any) -> tuple[Any, Any]:
+    pairs = jax.tree_util.tree_map(compress_leaf, grads, ef)
+    out_g = jax.tree_util.tree_map(lambda t: t[0], pairs,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    out_e = jax.tree_util.tree_map(lambda t: t[1], pairs,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    return out_g, out_e

@@ -1,0 +1,155 @@
+"""Logical-axis sharding rules (MaxText-style) -> NamedShardings.
+
+Parameters carry logical axis names (see repro.models.param.P); the rules
+here map them onto the production mesh:
+
+  * ``model`` carries tensor/expert parallelism: heads, mlp hidden, vocab,
+    experts;
+  * ``data`` doubles as the FSDP axis: the *embed* dim of every weight is
+    sharded over it (params + optimizer state fully sharded; XLA inserts
+    the per-layer all-gathers under the layer scan = FSDP semantics);
+  * ``batch`` shards over ``(pod, data)``.
+
+Conflict + divisibility handling: a mesh axis is used at most once per
+tensor (first dim wins), and any mapping whose axis-size product does not
+divide the dim falls back to fewer axes (then replication).  That rule is
+what lets kv_heads=2 models replicate KV while kv_heads=32 models shard it,
+and batch=1 long-context cells replicate batch — with no per-arch tables.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from ..models import param as pm
+
+LOGICAL_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    # §Perf iter 2: vocab-dim sharding over BOTH axes for embedding/LM-head
+    # tables; their embed dim stays replicated ("embed_r") so the logits
+    # contraction never partial-sums over a sharded d (the observed 17.9
+    # GB/step all-reduce).  Other weights keep embed->data (FSDP).
+    "vocab": ("model", "data"),
+    "embed_r": (),
+    "embed": ("data",),          # FSDP
+    # §Perf iter 3: context parallelism — when an arch's head count does
+    # not divide the model axis (qwen2 14H, starcoder2 24H, whisper 6H),
+    # attention would otherwise replicate across all 16 model ranks; the
+    # attention layer shards its sequence dim instead.
+    "ctx": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "q_lora": ("model",),
+    "kv_lora": (),
+    "mlp": ("model",),
+    "experts": ("model",),
+    "conv": (),
+    "state": (),
+    "seq": (),
+    "layers": (),
+}
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[name]
+
+
+def spec_for(axes: tuple[str | None, ...], shape: tuple[int, ...],
+             mesh: Mesh, rules: dict | None = None) -> PartitionSpec:
+    rules = rules or LOGICAL_RULES
+    used: set[str] = set()
+    entries: list[Any] = []
+    for dim, name in zip(shape, axes):
+        targets = rules.get(name, ()) if name else ()
+        targets = tuple(t for t in targets
+                        if t in mesh.axis_names and t not in used)
+        # progressively drop axes until the product divides the dim
+        while targets:
+            prod = math.prod(_axis_size(mesh, t) for t in targets)
+            if prod > 1 and dim % prod == 0:
+                break
+            targets = targets[:-1]
+        if targets and math.prod(_axis_size(mesh, t)
+                                 for t in targets) > 1:
+            used.update(targets)
+            entries.append(targets if len(targets) > 1 else targets[0])
+        else:
+            entries.append(None)
+    return PartitionSpec(*entries)
+
+
+def param_shardings(param_tree: Any, mesh: Mesh,
+                    rules: dict | None = None) -> Any:
+    """Tree of P -> tree of NamedSharding (stacked segment params get a
+    leading replicated 'layers' dim, detected by rank mismatch)."""
+    def leaf(p: pm.P):
+        axes = tuple(p.axes)
+        shape = p.value.shape
+        if len(axes) == len(shape) - 1:      # vmap-stacked (scan segment)
+            axes = (None,) + axes
+        elif len(axes) != len(shape):
+            raise ValueError(f"axes {axes} vs shape {shape}")
+        return NamedSharding(mesh, spec_for(axes, shape, mesh, rules))
+
+    return jax.tree_util.tree_map(leaf, param_tree, is_leaf=pm.is_param)
+
+
+def like_tree(shardings: Any, value_tree: Any) -> Any:
+    """Match a P-structured sharding tree to an unwrapped value tree."""
+    return shardings
+
+
+def batch_spec(shape: tuple[int, ...], mesh: Mesh,
+               extra: tuple[str | None, ...] | None = None) -> PartitionSpec:
+    """Sharding for an activation whose dim0 is batch."""
+    axes = ("batch",) + (extra or (None,) * (len(shape) - 1))
+    return spec_for(axes, shape, mesh)
+
+
+def data_shardings(tree: Any, mesh: Mesh, *, batch_dim: int = 0) -> Any:
+    """Shard every array in a pytree along its batch dim (replicate rest)."""
+    def leaf(x):
+        shape = x.shape
+        axes: list[str | None] = [None] * len(shape)
+        if len(shape) > batch_dim:
+            axes[batch_dim] = "batch"
+        return NamedSharding(mesh, spec_for(tuple(axes), shape, mesh))
+    return jax.tree_util.tree_map(leaf, tree)
+
+
+def cache_shardings(caches: Any, mesh: Mesh) -> Any:
+    """KV/SSM cache shardings: [layers, batch, seq|*, heads-ish, ...].
+
+    dim0 = stacked layers (replicated), dim1 = batch.  Attention caches
+    shard their *sequence* dim over the model axis (§Perf iter 5: split-KV
+    decode — every model rank attends over a KV slice; the online-softmax
+    combine is a tiny all-reduce, vs. re-gathering the cache every step,
+    which the baseline measured at 106 GB/step for internvl2 decode).
+    kv_heads pick up the model axis only when the seq dim can't.
+    """
+    def leaf(path, x):
+        shape = x.shape
+        axes: list[str | None] = [None] * len(shape)
+        if len(shape) >= 2:
+            axes[1] = "batch"
+        key = "/".join(str(getattr(p, "key", getattr(p, "name", p)))
+                       for p in path)
+        if "state" in key and len(shape) >= 4:     # [L, B, H, P, N]
+            axes[2] = "heads"
+        elif "conv" in key and len(shape) >= 4:    # [L, B, k, C]
+            axes[3] = "mlp"
+        elif len(shape) == 4:                      # MLA latent [L, B, S, r]
+            axes[2] = "ctx"
+        elif len(shape) >= 5:                      # attn [L, B, S, H, D]
+            axes[2] = "ctx"
+            axes[3] = "kv_heads"
+        return NamedSharding(mesh, spec_for(tuple(axes), shape, mesh))
+    return jax.tree_util.tree_map_with_path(leaf, caches)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, PartitionSpec())

@@ -1,0 +1,1 @@
+from .elastic import ElasticPlan, FailureInjector, StragglerMonitor  # noqa: F401

@@ -1,0 +1,96 @@
+"""GQA decode attention (flash-decode, split-KV) — the paper's regime.
+
+One new token against a deep KV cache is the memory-bound skinny op that
+the PIM-amenability test flags (op/byte ~ 1): the cache streams HBM->VMEM
+once, the queries stay resident.  The kernel mirrors the pim-register
+staging pattern: the grid walks KV blocks, an online-softmax accumulator
+(m, l, acc) lives in VMEM scratch across the walk (registers staging an
+open row), and the output is written once at the end.  The (B, Hkv) grid
+dims are embarrassingly parallel (bank-level parallelism); the KV-block dim
+streams (column walk within an open row).
+
+Block shapes keep D on the 128-lane axis and the KV block on the sublane
+axis (multiples of 8/16), so HBM reads are sequential full tiles.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BS = 512    # KV rows per block
+
+
+def _make_kernel(bs: int, scale: float):
+    def kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
+        s = pl.program_id(2)
+        ns = pl.num_programs(2)
+
+        @pl.when(s == 0)
+        def _():
+            m_ref[...] = jnp.full_like(m_ref, -1e30)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        base = s * bs
+        kpos = base + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+
+        @pl.when(base < len_ref[0])
+        def _():
+            q = q_ref[0, 0]                  # [G, D]
+            k = k_ref[0, :, 0, :]            # [BS, D]
+            v = v_ref[0, :, 0, :]
+            scores = jax.lax.dot_general(
+                q, k, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32) * scale   # [G, BS]
+            live = kpos < len_ref[0]         # [1, BS]
+            scores = jnp.where(live, scores, -1e30)
+            m_prev = m_ref[...]              # [G, 1]
+            m_new = jnp.maximum(m_prev, scores.max(axis=-1, keepdims=True))
+            p = jnp.exp(scores - m_new)      # [G, BS]
+            corr = jnp.exp(m_prev - m_new)
+            l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+            acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+                p.astype(jnp.float32), v.astype(jnp.float32),
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            m_ref[...] = m_new
+
+        @pl.when(s == ns - 1)
+        def _():
+            o_ref[0, 0] = (acc_ref[...]
+                           / jnp.maximum(l_ref[...], 1e-30)
+                           ).astype(o_ref.dtype)
+    return kernel
+
+
+def decode_attn_kernel(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                       length: jnp.ndarray, *, bs: int = BS,
+                       interpret: bool = True) -> jnp.ndarray:
+    """q: [B, Hkv, G, D]; k/v: [B, S, Hkv, D]; length: [1] int32."""
+    b, hkv, g, d = q.shape
+    s = k.shape[1]
+    bs = min(bs, s)
+    grid = (b, hkv, pl.cdiv(s, bs))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bi, h, si, ln: (bi, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, d), lambda bi, h, si, ln: (bi, si, h, 0)),
+            pl.BlockSpec((1, bs, 1, d), lambda bi, h, si, ln: (bi, si, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda bi, h, si, ln: (bi, h, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((g, 1), jnp.float32),
+                        pltpu.VMEM((g, 1), jnp.float32),
+                        pltpu.VMEM((g, d), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _make_kernel(bs, 1.0 / math.sqrt(d)), grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        interpret=interpret)(length, q, k, v)

@@ -1,0 +1,24 @@
+"""Public decode-attention op."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import BS, decode_attn_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
+def decode_attn(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                length: jnp.ndarray | int, *, bs: int = BS,
+                interpret: bool = True) -> jnp.ndarray:
+    """q: [B, Hq, D] one-token queries; k/v: [B, S, Hkv, D] cache;
+    attends over the first ``length`` cache rows."""
+    b, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d)
+    ln = jnp.asarray(length, jnp.int32).reshape(1)
+    out = decode_attn_kernel(qg, k, v, ln, bs=bs, interpret=interpret)
+    return out.reshape(b, hq, d)

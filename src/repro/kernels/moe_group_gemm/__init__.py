@@ -1,0 +1,1 @@
+from .ops import group_gemm  # noqa: F401

@@ -1,0 +1,59 @@
+"""Sparsity-aware grouped expert GEMM — the paper's §5.1.2 inside the LM.
+
+MoE dispatch produces capacity-padded per-expert token slabs whose
+occupancy is dynamic (most experts see few tokens at small batch — the
+ss-gemm regime).  Per-expert token counts are scalar-prefetched and every
+(expert, token-tile) grid step whose tile lies entirely beyond the
+occupancy is *skipped* (`@pl.when`): no MXU work and, because the expert
+weight block's index_map repeats between consecutive capacity steps, the
+skipped steps' weight copies are elided too.  That is command skipping at
+tile granularity: dynamic sparsity exploited with no sparse format and no
+metadata beyond the count vector the router already has.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BC = 128   # capacity rows per tile
+
+
+def _kernel(counts_ref, x_ref, w_ref, o_ref):
+    e = pl.program_id(0)
+    c = pl.program_id(1)
+    bc = x_ref.shape[1]
+
+    @pl.when(c * bc < counts_ref[e])
+    def _():
+        o_ref[0] = jax.lax.dot_general(
+            x_ref[0], w_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+    @pl.when(c * bc >= counts_ref[e])
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+
+def group_gemm_kernel(xe: jnp.ndarray, w: jnp.ndarray,
+                      counts: jnp.ndarray, *, bc: int = BC,
+                      interpret: bool = True) -> jnp.ndarray:
+    """xe: [E, C, D], w: [E, D, F], counts: [E] -> [E, C, F]."""
+    e, c, d = xe.shape
+    f = w.shape[2]
+    bc = min(bc, c)
+    grid = (e, pl.cdiv(c, bc))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, d), lambda ei, ci, cnt: (ei, ci, 0)),
+            pl.BlockSpec((1, d, f), lambda ei, ci, cnt: (ei, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, f), lambda ei, ci, cnt: (ei, ci, 0)),
+    )
+    return pl.pallas_call(
+        _kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((e, c, f), jnp.float32),
+        interpret=interpret)(counts.astype(jnp.int32), xe, w)

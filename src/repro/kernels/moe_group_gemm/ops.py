@@ -1,0 +1,23 @@
+"""Public grouped-GEMM op (zeroes padded rows, like the oracle)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import BC, group_gemm_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("bc", "interpret"))
+def group_gemm(xe: jnp.ndarray, w: jnp.ndarray, counts: jnp.ndarray, *,
+               bc: int = BC, interpret: bool = True) -> jnp.ndarray:
+    e, c, d = xe.shape
+    bc_eff = min(bc, c)
+    pad = (-c) % bc_eff
+    if pad:
+        xe = jnp.pad(xe, ((0, 0), (0, pad), (0, 0)))
+    y = group_gemm_kernel(xe, w, counts, bc=bc_eff, interpret=interpret)
+    y = y[:, :c]
+    live = jnp.arange(c)[None, :, None] < counts[:, None, None]
+    return jnp.where(live, y, 0.0)

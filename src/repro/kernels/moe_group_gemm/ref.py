@@ -1,0 +1,13 @@
+"""Oracle: capacity-padded grouped expert GEMM."""
+import jax.numpy as jnp
+
+
+def group_gemm_ref(xe: jnp.ndarray, w: jnp.ndarray,
+                   counts: jnp.ndarray) -> jnp.ndarray:
+    """xe: [E, C, D] expert token slabs (rows >= counts[e] are padding),
+    w: [E, D, F] -> [E, C, F]; padded rows produce zeros."""
+    y = jnp.einsum("ecd,edf->ecf", xe.astype(jnp.float32),
+                   w.astype(jnp.float32))
+    c = xe.shape[1]
+    live = jnp.arange(c)[None, :, None] < counts[:, None, None]
+    return jnp.where(live, y, 0.0)

@@ -1,0 +1,1 @@
+from .ops import push_scatter  # noqa: F401

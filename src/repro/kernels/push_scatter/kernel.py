@@ -1,0 +1,68 @@
+"""Cache-aware hot/cold partitioned scatter-add (the §5.1.3 idea on TPU).
+
+The paper's locality predictor routes reuse-heavy updates to the cache and
+the rest to PIM.  TPU analogue: a frequency-ranked *hot set* of destination
+rows lives in a dense VMEM accumulator ("the cache"); updates whose
+destination falls in the hot set are accumulated in-kernel via a one-hot
+matmul (scatter-as-GEMM — MXU-native, no serialization); cold updates are
+emitted untouched for the XLA gather/scatter path ("PIM side", handled by
+the wrapper with segment_sum).
+
+Grid: one step per update tile; the VMEM accumulator is a scratch carried
+across steps and written once at the end (pim-register accumulation).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BU = 512     # updates per tile
+HOT = 1024   # hot-set rows resident in VMEM
+
+
+def _kernel(dst_ref, val_ref, hot_acc_ref, cold_val_ref, acc_ref):
+    j = pl.program_id(0)
+    nb = pl.num_programs(0)
+
+    @pl.when(j == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    dst = dst_ref[...]                     # [1, BU] int32 (hot id or -1)
+    val = val_ref[...]                     # [1, BU]
+    hot = dst >= 0
+    # one-hot GEMM scatter into the resident hot accumulator
+    onehot = (dst[0][:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (dst.shape[1], acc_ref.shape[1]), 1))
+    contrib = jax.lax.dot_general(
+        jnp.where(hot, val, 0.0)[0][None, :].astype(jnp.float32),
+        onehot.astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    acc_ref[...] += contrib
+    cold_val_ref[...] = jnp.where(hot, 0.0, val)
+
+    @pl.when(j == nb - 1)
+    def _():
+        hot_acc_ref[...] = acc_ref[...]
+
+
+def push_scatter_kernel(dst_hot: jnp.ndarray, val: jnp.ndarray, *,
+                        hot: int = HOT, bu: int = BU,
+                        interpret: bool = True):
+    """dst_hot: [U] int32 — hot-set slot id, or -1 for cold updates.
+    val: [U] f32.  Returns (hot_acc [hot], cold_vals [U])."""
+    u = val.shape[0]
+    bu = min(bu, u)
+    grid = (pl.cdiv(u, bu),)
+    return pl.pallas_call(
+        _kernel, grid=grid,
+        in_specs=[pl.BlockSpec((1, bu), lambda j: (0, j)),
+                  pl.BlockSpec((1, bu), lambda j: (0, j))],
+        out_specs=(pl.BlockSpec((1, hot), lambda j: (0, 0)),
+                   pl.BlockSpec((1, bu), lambda j: (0, j))),
+        out_shape=(jax.ShapeDtypeStruct((1, hot), jnp.float32),
+                   jax.ShapeDtypeStruct((1, u), jnp.float32)),
+        scratch_shapes=[pltpu.VMEM((1, hot), jnp.float32)],
+        interpret=interpret)(dst_hot.reshape(1, u), val.reshape(1, u))

@@ -1,0 +1,10 @@
+"""Oracle: scatter-add of edge contributions into node values."""
+import jax
+import jax.numpy as jnp
+
+
+def push_scatter_ref(values: jnp.ndarray, contrib: jnp.ndarray,
+                     dst: jnp.ndarray) -> jnp.ndarray:
+    """values: [N], contrib: [U], dst: [U] -> values + segment_sum."""
+    return values + jax.ops.segment_sum(contrib, dst,
+                                        num_segments=values.shape[0])

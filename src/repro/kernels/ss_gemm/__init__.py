@@ -1,0 +1,1 @@
+from .ops import ssgemm, ssgemm_compact, ssgemm_masked  # noqa: F401

@@ -1,0 +1,117 @@
+"""Sparsity-aware blocked skinny GEMM — the §5.1.2 idea on TPU.
+
+The paper's sparsity-aware PIM inspects each skinny-matrix operand on the
+host and *skips issuing* the pim-command when it is zero.  The TPU analogue
+operates at (bm x bk) tile granularity with a host-computed block-occupancy
+mask delivered through scalar prefetch:
+
+* ``masked`` variant: static (M/bm, K/bk) grid; ``@pl.when(mask[k])`` skips
+  the MXU op for all-zero B tiles (saves compute slots, like skipping the
+  ALU command).
+* ``compact`` variant: the host compacts the nonzero k-block indices; the
+  grid runs over a fixed block *budget* and the A/B index_maps chase the
+  prefetched index list.  Padded trailing steps repeat the last real block
+  index, so Pallas's revisit elision skips their copies — zero blocks are
+  never fetched at all (the command is never issued).
+
+A-tile layout follows the paper's Fig. 5 blocked format: contiguous-M SIMD
+words, K along the fast axis, accumulation in VMEM scratch (pim-registers).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BM, BK = 256, 256
+
+
+def _masked_kernel(mask_ref, a_ref, b_ref, o_ref, acc_ref):
+    k = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(k == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(mask_ref[k] != 0)
+    def _():
+        acc_ref[...] += jax.lax.dot_general(
+            a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _():
+        o_ref[...] = acc_ref[...]
+
+
+def ssgemm_masked_kernel(a: jnp.ndarray, b: jnp.ndarray,
+                         block_mask: jnp.ndarray, *,
+                         bm: int = BM, bk: int = BK,
+                         interpret: bool = True) -> jnp.ndarray:
+    m, k = a.shape
+    _, n = b.shape
+    bm, bk = min(bm, m), min(bk, k)
+    grid = (pl.cdiv(m, bm), pl.cdiv(k, bk))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, mask: (i, j)),
+            pl.BlockSpec((bk, n), lambda i, j, mask: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i, j, mask: (i, 0)),
+        scratch_shapes=[pltpu.VMEM((bm, n), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _masked_kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret)(block_mask, a, b)
+
+
+def _compact_kernel(idx_ref, nlive_ref, a_ref, b_ref, o_ref, acc_ref):
+    j = pl.program_id(1)
+    nb = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(j < nlive_ref[0])
+    def _():
+        acc_ref[...] += jax.lax.dot_general(
+            a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(j == nb - 1)
+    def _():
+        o_ref[...] = acc_ref[...]
+
+
+def ssgemm_compact_kernel(a: jnp.ndarray, b: jnp.ndarray,
+                          block_idx: jnp.ndarray, n_live: jnp.ndarray, *,
+                          budget: int, bm: int = BM, bk: int = BK,
+                          interpret: bool = True) -> jnp.ndarray:
+    """block_idx: [budget] nonzero k-block ids (trailing entries repeat the
+    last live id); n_live: [1] live count."""
+    m, k = a.shape
+    _, n = b.shape
+    bm, bk = min(bm, m), min(bk, k)
+    grid = (pl.cdiv(m, bm), budget)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, idx, nl: (i, idx[j])),
+            pl.BlockSpec((bk, n), lambda i, j, idx, nl: (idx[j], 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i, j, idx, nl: (i, 0)),
+        scratch_shapes=[pltpu.VMEM((bm, n), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _compact_kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret)(block_idx, n_live, a, b)

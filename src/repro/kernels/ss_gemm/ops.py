@@ -1,0 +1,76 @@
+"""Public sparse-skinny-GEMM ops: host-side operand inspection (the
+paper's "check before issuing") + kernel dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import BK, BM, ssgemm_compact_kernel, ssgemm_masked_kernel
+
+
+def block_occupancy(b: jnp.ndarray, bk: int) -> jnp.ndarray:
+    """[K/bk] int32 mask: 1 where the B k-block has any nonzero."""
+    k, n = b.shape
+    nk = -(-k // bk)
+    pad = nk * bk - k
+    bb = jnp.pad(b, ((0, pad), (0, 0))).reshape(nk, bk * n)
+    return jnp.any(bb != 0, axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bk", "interpret"))
+def ssgemm_masked(a: jnp.ndarray, b: jnp.ndarray, *, bm: int = BM,
+                  bk: int = BK, interpret: bool = True) -> jnp.ndarray:
+    mask = block_occupancy(b, min(bk, a.shape[1]))
+    return ssgemm_masked_kernel(a, b, mask, bm=bm, bk=bk,
+                                interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bk", "budget", "interpret"))
+def ssgemm_compact(a: jnp.ndarray, b: jnp.ndarray, *, budget: int,
+                   bm: int = BM, bk: int = BK,
+                   interpret: bool = True) -> jnp.ndarray:
+    """Compacted-index variant: only (up to ``budget``) occupied k-blocks
+    are ever fetched.  Overflowing blocks beyond the budget are handled by
+    a dense jnp fallback contribution so the op stays exact."""
+    bk = min(bk, a.shape[1])
+    occ = block_occupancy(b, bk)
+    nk = occ.shape[0]
+    order = jnp.argsort(-occ)            # live blocks first, stable-ish
+    live = jnp.take(jnp.arange(nk), order)
+    n_live = jnp.sum(occ)
+    capped = jnp.minimum(n_live, budget)
+    idx = jnp.where(jnp.arange(budget) < capped,
+                    live[:budget],
+                    live[jnp.maximum(capped - 1, 0)]).astype(jnp.int32)
+    out = ssgemm_compact_kernel(a, b, idx, capped[None].astype(jnp.int32),
+                                budget=budget, bm=bm, bk=bk,
+                                interpret=interpret)
+    # exactness guard: contributions of blocks beyond the budget
+    over = jnp.where(jnp.arange(nk) >= budget, occ[order], 0)
+    has_over = jnp.any(over > 0)
+
+    def overflow_part():
+        sel = jnp.zeros((nk,), bool).at[order].set(
+            jnp.arange(nk) >= budget)
+        sel = sel & (occ > 0)
+        k = a.shape[1]
+        keep = jnp.repeat(sel, bk)[:k]
+        bz = jnp.where(keep[:, None], b, 0)
+        return jnp.dot(a.astype(jnp.float32), bz.astype(jnp.float32))
+
+    return out + jax.lax.cond(has_over, overflow_part,
+                              lambda: jnp.zeros_like(out))
+
+
+def ssgemm(a: jnp.ndarray, b: jnp.ndarray, *, sparsity_aware: bool = True,
+           interpret: bool = True) -> jnp.ndarray:
+    """Default entry point: masked skip when sparsity-aware, else dense."""
+    if sparsity_aware:
+        return ssgemm_masked(a, b, interpret=interpret)
+    ones = jnp.ones((-(-a.shape[1] // min(BK, a.shape[1])),), jnp.int32)
+    from .kernel import ssgemm_masked_kernel as k
+    return k(a, b, ones, interpret=interpret)

@@ -1,0 +1,7 @@
+"""Oracle for the sparse skinny GEMM."""
+import jax.numpy as jnp
+
+
+def ssgemm_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """a: [M, K] dense, b: [K, N] skinny (sparse) -> [M, N] in f32."""
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))

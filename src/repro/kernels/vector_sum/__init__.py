@@ -1,0 +1,1 @@
+from .ops import vector_sum  # noqa: F401

@@ -1,0 +1,26 @@
+"""Public op: shape-polymorphic vector sum via the 2-D tiled kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import vector_sum_2d
+
+LANES = 512
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def vector_sum(a: jnp.ndarray, b: jnp.ndarray, *,
+               interpret: bool = True) -> jnp.ndarray:
+    if a.shape != b.shape:
+        raise ValueError("shape mismatch")
+    flat = a.reshape(-1)
+    n = flat.shape[0]
+    rows = -(-n // LANES)
+    pad = rows * LANES - n
+    a2 = jnp.pad(flat, (0, pad)).reshape(rows, LANES)
+    b2 = jnp.pad(b.reshape(-1), (0, pad)).reshape(rows, LANES)
+    out = vector_sum_2d(a2, b2, interpret=interpret)
+    return out.reshape(-1)[:n].reshape(a.shape)

@@ -1,0 +1,6 @@
+"""Oracle for vector-sum."""
+import jax.numpy as jnp
+
+
+def vector_sum_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return a + b

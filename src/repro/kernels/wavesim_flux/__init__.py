@@ -1,0 +1,1 @@
+from .ops import flux1d  # noqa: F401

@@ -1,0 +1,13 @@
+"""Oracle: 1-D face-flux exchange along a linearized element axis."""
+import jax.numpy as jnp
+
+
+def flux1d_ref(hi: jnp.ndarray, lo: jnp.ndarray,
+               alpha: float = 0.5) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """hi/lo: [E, T] element high/low face traces (periodic neighbors).
+
+    Returns (flux_hi, flux_lo): alpha * (neighbor_trace - own_trace).
+    """
+    nb_hi = jnp.roll(lo, -1, axis=0)   # next element's low face
+    nb_lo = jnp.roll(hi, 1, axis=0)    # previous element's high face
+    return alpha * (nb_hi - hi), alpha * (nb_lo - lo)

@@ -1,0 +1,63 @@
+"""wavesim-volume Pallas kernel.
+
+TPU adaptation (DESIGN.md §2): the three directional derivative applies
+(D (x) I (x) I + I (x) D (x) I + I (x) I (x) D) fold into ONE dense
+[27, 27] reference operator W applied per (element, field) nodal vector —
+so the volume term becomes a single [rows, 27] @ [27, 27] matmul per tile,
+i.e. pure MXU work instead of three strided small contractions (a GPU-style
+loop nest that would waste the systolic array).  Node dim is padded to 32
+(and would be padded to 128 lanes on real hardware; the pad content is
+zero so results are exact).
+
+Tiles of 256 (element x field) rows stage through VMEM; W stays resident
+(index_map pins block (0,0)) — the "operator broadcast as immediate"
+placement from §4.2.3.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.primitives.wavesim import NODES
+
+ROWS = 256
+NPAD = 32
+
+
+def fused_operator(c: float = 1.0, dtype=jnp.float32) -> jnp.ndarray:
+    """W[27, 27]: sum of the three directional Kronecker operators."""
+    d = np.array([[-1.5, 2.0, -0.5],       # = reference_operator, pure numpy
+                  [-0.5, 0.0, 0.5],        # (jit-safe constant folding)
+                  [0.5, -2.0, 1.5]], dtype=np.float64)
+    eye = np.eye(3)
+    w = (np.kron(np.kron(d, eye), eye)
+         + np.kron(np.kron(eye, d), eye)
+         + np.kron(np.kron(eye, eye), d))
+    w = c * w
+    wp = np.zeros((NPAD, NPAD))
+    # kernel computes row-vector @ W, i.e. (W^T u)^T — store transposed
+    wp[:NODES, :NODES] = w.T
+    return jnp.asarray(wp, dtype)
+
+
+def _kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def volume_kernel(x: jnp.ndarray, w: jnp.ndarray, *,
+                  rows: int = ROWS, interpret: bool = True) -> jnp.ndarray:
+    """x: [R, NPAD] (element*field rows, padded nodes) @ w [NPAD, NPAD]."""
+    r = x.shape[0]
+    rows = min(rows, r)
+    grid = (pl.cdiv(r, rows),)
+    return pl.pallas_call(
+        _kernel, grid=grid,
+        in_specs=[pl.BlockSpec((rows, NPAD), lambda i: (i, 0)),
+                  pl.BlockSpec((NPAD, NPAD), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((rows, NPAD), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret)(x, w)

@@ -1,0 +1,23 @@
+"""Public volume op: [E, F, 3, 3, 3] nodal fields -> volume RHS."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.primitives.wavesim import NODES
+from .kernel import NPAD, fused_operator, volume_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("c", "interpret"))
+def volume(u: jnp.ndarray, c: float = 1.0, *,
+           interpret: bool = True) -> jnp.ndarray:
+    e, f = u.shape[:2]
+    # kron fusion uses index order (i-major): flatten [3,3,3] C-order gives
+    # node index i*9 + j*3 + k which matches kron(D_i, D_j, D_k) layout.
+    x = u.reshape(e * f, NODES)
+    x = jnp.pad(x, ((0, 0), (0, NPAD - NODES)))
+    w = fused_operator(c, u.dtype)
+    y = volume_kernel(x, w, interpret=interpret)
+    return y[:, :NODES].reshape(u.shape)

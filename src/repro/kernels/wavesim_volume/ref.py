@@ -1,0 +1,9 @@
+"""Oracle: the functional DGM volume term from the core primitive."""
+import jax.numpy as jnp
+
+from repro.core.primitives.wavesim import volume as _volume
+
+
+def volume_ref(u: jnp.ndarray, c: float = 1.0) -> jnp.ndarray:
+    """u: [elements, fields, 3, 3, 3] -> rhs, same shape."""
+    return _volume(u, c)

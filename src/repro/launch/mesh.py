@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing never touches jax
+device state.  Single-pod: 16x16 = 256 chips (data, model).  Multi-pod:
+2x16x16 = 512 chips (pod, data, model) — the pod axis is the slowest
+(DCN-connected) dimension and carries only data parallelism.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — run "
+            "under launch/dryrun.py (XLA_FLAGS host-platform device count) "
+            "or on real hardware")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_host_mesh() -> jax.sharding.Mesh:
+    """Whatever-fits mesh for local runs/examples (1 device -> (1, 1))."""
+    n = len(jax.devices())
+    model = 1
+    for cand in (4, 2, 1):
+        if n % cand == 0 and cand <= n:
+            model = cand
+            break
+    return jax.make_mesh((n // model, model), ("data", "model"))

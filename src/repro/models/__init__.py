@@ -1,0 +1,10 @@
+"""Model substrate: composable, functional JAX model definitions.
+
+Parameters are pytrees of :class:`repro.models.param.P` leaves carrying
+logical sharding axes; :mod:`repro.distributed.sharding` turns those into
+NamedShardings for any mesh.  All model code is pure-functional
+(init_fn -> params, apply_fn(params, inputs) -> outputs) and scan-friendly.
+"""
+
+from . import model_zoo  # noqa: F401
+from .model_zoo import build_model  # noqa: F401

@@ -1,0 +1,145 @@
+"""Core layers: norms, projections, embeddings, RoPE, MLPs.
+
+Convention: ``init_*`` returns a dict tree of :class:`repro.models.param.P`
+(value + logical axes); ``*_apply`` functions take the *unwrapped* value
+tree (plain arrays) — they run inside jit.  Logical axis names used here:
+
+  vocab, embed, heads, kv_heads, head_dim, mlp, experts, q_lora, kv_lora,
+  conv, state — mapped to mesh axes by repro.distributed.sharding.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import param as pm
+
+
+# ------------------------------ norms --------------------------------------
+
+def init_rmsnorm(d: int) -> dict:
+    return {"scale": pm.ones((d,), ("embed",))}
+
+
+def rmsnorm(params: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"]).astype(dtype)
+
+
+def init_layernorm(d: int) -> dict:
+    return {"scale": pm.ones((d,), ("embed",)),
+            "bias": pm.zeros((d,), ("embed",))}
+
+
+def layernorm(params: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(dtype)
+
+
+# ------------------------------ dense --------------------------------------
+
+def init_dense(key: jax.Array, shape: tuple[int, ...],
+               axes: tuple[str | None, ...], *, bias: bool = False,
+               bias_axes: tuple[str | None, ...] | None = None,
+               scale: float | None = None) -> dict:
+    scale = pm.fanin_scale(shape) if scale is None else scale
+    out = {"w": pm.normal(key, shape, axes, stddev=scale)}
+    if bias:
+        bshape = shape[1:]
+        out["b"] = pm.zeros(bshape, bias_axes or axes[1:])
+    return out
+
+
+def dense(params: dict, x: jnp.ndarray, spec: str) -> jnp.ndarray:
+    """einsum-based projection, e.g. spec='btd,dhq->bthq'."""
+    y = jnp.einsum(spec, x, params["w"].astype(x.dtype))
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    return y
+
+
+# ------------------------------ embedding ----------------------------------
+
+def init_embedding(key: jax.Array, vocab: int, d: int) -> dict:
+    # "embed_r": replicated model dim — vocab carries all the sharding
+    # (see distributed.sharding §Perf iter 2 note)
+    return {"table": pm.normal(key, (vocab, d), ("vocab", "embed_r"),
+                               stddev=0.02)}
+
+
+def embed(params: dict, tokens: jnp.ndarray, dtype=jnp.bfloat16) -> jnp.ndarray:
+    return params["table"].astype(dtype)[tokens]
+
+
+def unembed(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Tied read-out: logits in f32 for loss stability."""
+    return jnp.einsum("btd,vd->btv", x.astype(jnp.float32),
+                      params["table"].astype(jnp.float32))
+
+
+# ------------------------------ RoPE ----------------------------------------
+
+def rope_freqs(head_dim: int, theta: float, dtype=jnp.float32) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=dtype) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10_000.0) -> jnp.ndarray:
+    """x: [..., L, H, D] (D even), positions: [..., L] (int)."""
+    freqs = rope_freqs(x.shape[-1], theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # [..., L, D/2]
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, d: int, dtype=jnp.float32) -> jnp.ndarray:
+    pos = jnp.arange(length, dtype=dtype)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=dtype) * (-jnp.log(10000.0) / d))
+    pe = jnp.zeros((length, d), dtype=dtype)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ------------------------------ activations --------------------------------
+
+def activation(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "sq_relu":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {name}")
+
+
+# ------------------------------ MLP ----------------------------------------
+
+def init_mlp(key: jax.Array, d: int, d_ff: int, *, gated: bool = True) -> dict:
+    ks = jax.random.split(key, 3)
+    out = {"wi": init_dense(ks[0], (d, d_ff), ("embed", "mlp")),
+           "wo": init_dense(ks[1], (d_ff, d), ("mlp", "embed"))}
+    if gated:
+        out["wg"] = init_dense(ks[2], (d, d_ff), ("embed", "mlp"))
+    return out
+
+
+def mlp(params: dict, x: jnp.ndarray, act_name: str = "silu") -> jnp.ndarray:
+    act = activation(act_name)
+    h = dense(params["wi"], x, "btd,df->btf")
+    if "wg" in params:
+        h = act(dense(params["wg"], x, "btd,df->btf")) * h
+    else:
+        h = act(h)
+    return dense(params["wo"], h, "btf,fd->btd")

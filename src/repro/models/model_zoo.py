@@ -1,0 +1,116 @@
+"""Model zoo: one entry point per assigned architecture.
+
+``build_model("deepseek-v3-671b")`` returns a :class:`Model` wrapping the
+functional transformer with the arch's config: init / loss / forward /
+decode-step / cache plumbing and ``input_specs`` (ShapeDtypeStruct
+stand-ins for every model input at a given shape cell — the dry-run
+contract; modality frontends contribute precomputed embeddings here).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer
+from .transformer import forward, init_caches, init_lm, lm_loss, logits_fn
+from ..configs import get_config
+from ..configs.base import ArchConfig, Frontend, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # ----------------------------- params --------------------------------
+    def init(self, key: jax.Array) -> dict:
+        return init_lm(key, self.cfg)
+
+    def abstract_ptree(self) -> dict:
+        """Shape-only P-tree (values are ShapeDtypeStructs, axes kept) —
+        feeds repro.distributed.sharding.param_shardings."""
+        from .param import P
+
+        def wrap(key):
+            return init_lm(key, self.cfg)
+        return jax.eval_shape(wrap, jax.random.key(0))
+
+    def abstract_params(self, dtype=jnp.float32) -> dict:
+        """Shape-only unwrapped params (no allocation) — dry-run inputs."""
+        from . import param as pm
+        out = pm.unwrap(self.abstract_ptree())
+        if dtype != jnp.float32:
+            out = jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct(
+                    s.shape, dtype if s.dtype == jnp.float32 else s.dtype),
+                out)
+        return out
+
+    # ----------------------------- training ------------------------------
+    def loss(self, params, batch, *, dtype=jnp.bfloat16, remat: bool = False):
+        return lm_loss(params, batch, self.cfg, dtype=dtype, remat=remat)
+
+    # ----------------------------- inference -----------------------------
+    def prefill(self, params, batch, max_len: int, *, dtype=jnp.bfloat16):
+        """Run the prompt, fill caches sized for ``max_len`` tokens."""
+        caches = init_caches(self.cfg, batch["tokens"].shape[0], max_len,
+                             dtype)
+        hidden, caches, _ = forward(params, batch, self.cfg, caches=caches,
+                                    cache_len=jnp.zeros((), jnp.int32),
+                                    dtype=dtype)
+        logits = logits_fn(params, hidden[:, -1:], self.cfg)
+        return logits, caches
+
+    def decode_step(self, params, tokens, caches, cache_len, *,
+                    dtype=jnp.bfloat16, extra: dict | None = None):
+        """One decode step: tokens [B, 1] against filled caches."""
+        batch = {"tokens": tokens}
+        if extra:
+            batch.update(extra)
+        hidden, caches, _ = forward(params, batch, self.cfg, caches=caches,
+                                    cache_len=cache_len, dtype=dtype)
+        logits = logits_fn(params, hidden, self.cfg)
+        return logits, caches
+
+    def init_caches(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        return init_caches(self.cfg, batch, max_len, dtype)
+
+    # ----------------------------- dry-run inputs ------------------------
+    def input_specs(self, shape: ShapeConfig, dtype=jnp.bfloat16) -> dict:
+        """ShapeDtypeStruct stand-ins for every input of the step this
+        shape cell lowers (train -> lm_loss batch; decode -> one-token
+        step + caches)."""
+        cfg = self.cfg
+        b = shape.global_batch
+        i32 = jnp.int32
+        if shape.kind in ("train", "prefill"):
+            batch = {"tokens": jax.ShapeDtypeStruct((b, shape.seq_len), i32)}
+            if cfg.frontend is Frontend.VISION_STUB:
+                batch["vision_embeds"] = jax.ShapeDtypeStruct(
+                    (b, cfg.vision_tokens, cfg.d_model), dtype)
+            if cfg.enc_dec:
+                batch["encoder_frames"] = jax.ShapeDtypeStruct(
+                    (b, cfg.encoder_seq, cfg.d_model), dtype)
+            return {"batch": batch}
+        # decode: one new token against a seq_len cache
+        caches = jax.eval_shape(
+            lambda: init_caches(cfg, b, shape.seq_len, dtype))
+        extra = {}
+        if cfg.enc_dec:
+            hd = cfg.resolved_head_dim
+            extra["cross_kv"] = (
+                jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.kv_heads, hd),
+                                     dtype),
+                jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.kv_heads, hd),
+                                     dtype))
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), i32),
+                "caches": caches,
+                "cache_len": jax.ShapeDtypeStruct((), i32),
+                "extra": extra}
+
+
+def build_model(name_or_cfg: str | ArchConfig) -> Model:
+    cfg = (name_or_cfg if isinstance(name_or_cfg, ArchConfig)
+           else get_config(name_or_cfg))
+    return Model(cfg)

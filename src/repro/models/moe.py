@@ -1,0 +1,235 @@
+"""Mixture-of-Experts FFN with sort-based (MegaBlocks-style) dispatch.
+
+Routing: softmax top-k with optional shared experts (DeepSeek-MoE style).
+Dispatch is gather-based: token->expert assignments are sorted by expert,
+each expert receives a fixed-capacity slice (overflow drops, standard
+capacity-factor semantics), expert GEMMs run as one batched einsum over the
+expert dimension (shardable on the "experts" logical axis = expert
+parallelism), and outputs scatter-add back with routing weights.
+
+This dispatch is exactly the paper's ss-gemm structure: a dense stationary
+operand (expert weights) hit by a dynamically-sparse skinny operand (the
+tokens routed to each expert).  The sparsity-aware PIM idea (§5.1.2 — skip
+issuing work for zero operands) maps to skipping empty expert blocks; the
+Pallas kernel in repro.kernels.moe_group_gemm implements that skip at tile
+granularity, and the planner reports the expected win.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import param as pm
+from .layers import activation, init_dense, init_mlp, mlp
+from ..configs.base import ArchConfig
+
+
+def init_moe(key: jax.Array, cfg: ArchConfig) -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    out = {
+        "router": init_dense(ks[0], (d, m.n_experts), ("embed", "experts"),
+                             scale=0.02),
+        "wi": pm.normal(ks[1], (m.n_experts, d, m.d_ff_expert),
+                        ("experts", "embed", "mlp"),
+                        stddev=pm.fanin_scale((d,))),
+        "wg": pm.normal(ks[2], (m.n_experts, d, m.d_ff_expert),
+                        ("experts", "embed", "mlp"),
+                        stddev=pm.fanin_scale((d,))),
+        "wo": pm.normal(ks[3], (m.n_experts, m.d_ff_expert, d),
+                        ("experts", "mlp", "embed"),
+                        stddev=pm.fanin_scale((m.d_ff_expert,))),
+    }
+    if m.n_shared_experts:
+        shared_ff = m.d_ff_shared or m.d_ff_expert * m.n_shared_experts
+        out["shared"] = init_mlp(ks[4], d, shared_ff, gated=True)
+    return out
+
+
+def route(params: dict, x2d: jnp.ndarray, cfg: ArchConfig):
+    """x2d: [T, D] -> (weights [T,k], expert_ids [T,k], router probs)."""
+    m = cfg.moe
+    logits = jnp.einsum("td,de->te", x2d.astype(jnp.float32),
+                        params["router"]["w"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, ids = jax.lax.top_k(probs, m.top_k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)   # renormalize
+    return w, ids, probs
+
+
+def aux_load_balance_loss(probs: jnp.ndarray, ids: jnp.ndarray,
+                          n_experts: int) -> jnp.ndarray:
+    """Switch-style load-balance loss (density * router-prob product)."""
+    density = jnp.mean(
+        jax.nn.one_hot(ids, n_experts, dtype=jnp.float32), axis=(0, 1))
+    prob_mass = jnp.mean(probs, axis=0)
+    return n_experts * jnp.sum(density * prob_mass)
+
+
+def _local_expert_ffn(x2d, ids, w, wi, wg, wo, *, e_local, top_k, capacity,
+                      act, my_rank):
+    """Per-device expert compute inside shard_map (§Perf iter 6).
+
+    Activations are replicated across the model axis (batch-only
+    sharding), so each model rank already holds every token: dispatch is
+    *local* selection of the (token, choice) pairs that target this rank's
+    experts — no data movement at all — followed by local expert GEMMs and
+    a single psum combine.  This replaces the jit-auto plan whose combine
+    and bookkeeping all-reduced terabytes per step (see EXPERIMENTS §Perf).
+    """
+    t, d = x2d.shape
+    flat_ids = ids.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t), top_k)
+    flat_w = w.reshape(-1)
+    mine = (flat_ids // e_local) == my_rank
+    local_ids = jnp.where(mine, flat_ids % e_local, e_local)
+    onehot = jax.nn.one_hot(local_ids, e_local, dtype=jnp.int32)
+    cum = jnp.cumsum(onehot, axis=0)
+    rank = jnp.take_along_axis(
+        cum, jnp.minimum(local_ids, e_local - 1)[:, None], axis=1)[:, 0] - 1
+    keep = mine & (rank < capacity)
+    slot = jnp.where(keep, local_ids * capacity + rank, e_local * capacity)
+    buf_tok = jnp.full((e_local * capacity + 1,), t, dtype=jnp.int32)
+    buf_tok = buf_tok.at[slot].set(flat_tok.astype(jnp.int32),
+                                   mode="drop")[:-1]
+    buf_w = jnp.zeros((e_local * capacity + 1,), dtype=w.dtype)
+    buf_w = buf_w.at[slot].set(flat_w, mode="drop")[:-1]
+    xpad = jnp.concatenate([x2d, jnp.zeros((1, d), x2d.dtype)], axis=0)
+    xe = xpad[buf_tok].reshape(e_local, capacity, d)
+    h = act(jnp.einsum("ecd,edf->ecf", xe, wg)) * jnp.einsum(
+        "ecd,edf->ecf", xe, wi)
+    ye = jnp.einsum("ecf,efd->ecd", h, wo)
+    y2d = jnp.zeros((t + 1, d), ye.dtype)
+    y2d = y2d.at[buf_tok].add(
+        ye.reshape(-1, d) * buf_w[:, None].astype(ye.dtype))
+    return y2d[:t]
+
+
+def _moe_shard_map(params, x, cfg, act_name, mesh):
+    """shard_map MoE: local dispatch + expert GEMMs + one psum/layer."""
+    from jax.sharding import PartitionSpec as P
+    m = cfg.moe
+    b, l, d = x.shape
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    e_local = m.n_experts // sizes["model"]
+    weights, ids, probs = route(params, x.reshape(-1, d), cfg)
+    batch_axes = tuple(a for a in ("pod", "data")
+                       if a in mesh.axis_names and sizes[a] > 1)
+    n_batch = 1
+    for a in batch_axes:
+        n_batch *= sizes[a]
+    if b % max(1, n_batch):
+        batch_axes, n_batch = (), 1          # replicate small batches
+    bspec = (batch_axes if len(batch_axes) > 1
+             else (batch_axes[0] if batch_axes else None))
+    t_local = (b // n_batch) * l
+    capacity = max(1, int(t_local * m.top_k * m.capacity_factor
+                          / m.n_experts))
+    act = activation(act_name)
+
+    def body(x_blk, ids_blk, w_blk, wi, wg, wo):
+        t_loc = x_blk.shape[0] * x_blk.shape[1]
+        y = _local_expert_ffn(
+            x_blk.reshape(t_loc, d), ids_blk.reshape(t_loc, m.top_k),
+            w_blk.reshape(t_loc, m.top_k), wi, wg, wo,
+            e_local=e_local, top_k=m.top_k, capacity=capacity, act=act,
+            my_rank=jax.lax.axis_index("model"))
+        y = jax.lax.psum(y, axis_name="model")
+        return y.reshape(x_blk.shape)
+
+    sm = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(bspec, None, None), P(bspec, None, None),
+                  P(bspec, None, None),
+                  P("model", None, None), P("model", None, None),
+                  P("model", None, None)),
+        out_specs=P(bspec, None, None),
+        check_vma=False)
+    y = sm(x, ids.reshape(b, l, m.top_k).astype(jnp.int32),
+           weights.reshape(b, l, m.top_k).astype(x.dtype),
+           params["wi"].astype(x.dtype), params["wg"].astype(x.dtype),
+           params["wo"].astype(x.dtype))
+    if "shared" in params:
+        y = y + mlp(params["shared"], x, act_name)
+    aux = aux_load_balance_loss(probs, ids, m.n_experts)
+    return y.astype(x.dtype), aux
+
+
+def moe_apply(params: dict, x: jnp.ndarray, cfg: ArchConfig,
+              act_name: str = "silu"):
+    """x: [B, L, D] -> (y, aux_loss)."""
+    m = cfg.moe
+    b, l, d = x.shape
+    t = b * l
+    # §Perf iter 6: shard_map fast path when a mesh policy is active and
+    # experts divide the model axis.  Token-count gate (iter 6 addendum):
+    # at decode-sized batches the expert *weights* dominate the traffic —
+    # shard_map's materialized [E_local, D, F] weights would force an
+    # FSDP gather per step (measured +540 ms on deepseek decode), while
+    # XLA's auto plan keeps the skinny GEMM distributed over both axes.
+    from ..distributed.act_sharding import _ACTIVE
+    mesh = _ACTIVE.get()
+    if (mesh is not None and "model" in mesh.axis_names and t >= 4096
+            and m.n_experts % dict(zip(mesh.axis_names,
+                                       mesh.devices.shape))["model"] == 0):
+        return _moe_shard_map(params, x, cfg, act_name, mesh)
+    x2d = x.reshape(t, d)
+    w, ids, probs = route(params, x2d, cfg)
+    k = m.top_k
+    e = m.n_experts
+    capacity = max(1, int(t * k * m.capacity_factor / e))
+
+    # --- rank-based dispatch (§Perf iter 4/5a) -------------------------------
+    # Position-in-expert via a cumsum over token-major one-hot assignments:
+    # sharding-friendly (a cumsum along the sharded token axis lowers to a
+    # local scan + a tiny carry exchange), unlike the argsort dispatch,
+    # whose global sort re-gathered activations every MoE layer in the
+    # baseline dry-run.
+    flat_ids = ids.reshape(-1)                        # [T*k], token-major
+    flat_tok = jnp.repeat(jnp.arange(t), k)           # source token per slot
+    flat_w = w.reshape(-1)
+    onehot = jax.nn.one_hot(flat_ids, e, dtype=jnp.int32)   # [T*k, E]
+    cum = jnp.cumsum(onehot, axis=0)
+    rank = jnp.take_along_axis(cum, flat_ids[:, None], axis=1)[:, 0] - 1
+    keep = rank < capacity                            # drop overflow
+    slot = jnp.where(keep, flat_ids * capacity + rank, e * capacity)
+
+    # token index per (expert, capacity) slot; padded slots point at a
+    # zero row appended to x.
+    buf_tok = jnp.full((e * capacity + 1,), t, dtype=jnp.int32)
+    buf_tok = buf_tok.at[slot].set(flat_tok.astype(jnp.int32),
+                                   mode="drop")[:-1]
+    buf_w = jnp.zeros((e * capacity + 1,), dtype=w.dtype)
+    buf_w = buf_w.at[slot].set(flat_w, mode="drop")[:-1]
+
+    xpad = jnp.concatenate([x2d, jnp.zeros((1, d), x2d.dtype)], axis=0)
+    xe = xpad[buf_tok].reshape(e, capacity, d)        # gather  [E, C, D]
+    # §Perf iter 4: pin dispatch buffers to expert (model-axis) sharding so
+    # the token gather lowers to expert-parallel dispatch traffic
+    # (tokens x top_k x d moving once) instead of re-gathering the full
+    # activation per MoE layer (the collective-bound baseline).
+    from ..distributed.act_sharding import constrain
+    xe = constrain(xe, ("experts", None, None))
+
+    # --- expert GEMMs (expert dim shardable -> EP) --------------------------
+    act = activation(act_name)
+    wi = params["wi"].astype(x.dtype)
+    wg = params["wg"].astype(x.dtype)
+    wo = params["wo"].astype(x.dtype)
+    h = act(jnp.einsum("ecd,edf->ecf", xe, wg)) * jnp.einsum(
+        "ecd,edf->ecf", xe, wi)
+    h = constrain(h, ("experts", None, "mlp"))
+    ye = jnp.einsum("ecf,efd->ecd", h, wo)            # [E, C, D]
+    ye = constrain(ye, ("experts", None, None))
+
+    # --- weighted combine ----------------------------------------------------
+    y2d = jnp.zeros((t + 1, d), ye.dtype)
+    y2d = y2d.at[buf_tok].add(ye.reshape(e * capacity, d)
+                              * buf_w[:, None].astype(ye.dtype))
+    y = y2d[:t].reshape(b, l, d)
+
+    if "shared" in params:
+        y = y + mlp(params["shared"], x, act_name)
+    aux = aux_load_balance_loss(probs, ids, e)
+    return y.astype(x.dtype), aux

@@ -1,0 +1,85 @@
+"""Parameter leaves with logical sharding axes.
+
+``P(value, axes)`` wraps an array with a tuple of logical axis names (one
+per dim, ``None`` = replicated).  Model init functions build trees of ``P``;
+:func:`unwrap` / :func:`axes_of` split them into a value tree and an axes
+tree with identical structure (what pjit's in_shardings wants).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class P:
+    value: Any
+    axes: tuple[str | None, ...]
+
+
+def _p_flatten(p: P):
+    return (p.value,), tuple(p.axes)
+
+
+def _p_unflatten(axes, children):
+    return P(children[0], axes)
+
+
+jax.tree_util.register_pytree_node(P, _p_flatten, _p_unflatten)
+
+
+def is_param(x: Any) -> bool:
+    return isinstance(x, P)
+
+
+def unwrap(tree: Any) -> Any:
+    """Tree of P -> tree of arrays."""
+    return jax.tree_util.tree_map(lambda p: p.value, tree, is_leaf=is_param)
+
+
+def axes_of(tree: Any) -> Any:
+    """Tree of P -> tree of logical-axes tuples."""
+    return jax.tree_util.tree_map(lambda p: tuple(p.axes), tree,
+                                  is_leaf=is_param)
+
+
+def shapes_of(tree: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.value.shape, p.value.dtype),
+        tree, is_leaf=is_param)
+
+
+def n_params(tree: Any) -> int:
+    leaves = jax.tree_util.tree_leaves(unwrap(tree))
+    return int(sum(np.prod(l.shape) for l in leaves))
+
+
+# ------------------------- initializers -----------------------------------
+
+def normal(key: jax.Array, shape: tuple[int, ...], axes: tuple[str | None, ...],
+           stddev: float = 0.02, dtype=jnp.float32) -> P:
+    return P(stddev * jax.random.normal(key, shape, dtype=dtype), axes)
+
+
+def zeros(shape: tuple[int, ...], axes: tuple[str | None, ...],
+          dtype=jnp.float32) -> P:
+    return P(jnp.zeros(shape, dtype=dtype), axes)
+
+
+def ones(shape: tuple[int, ...], axes: tuple[str | None, ...],
+         dtype=jnp.float32) -> P:
+    return P(jnp.ones(shape, dtype=dtype), axes)
+
+
+def abstract(shape: tuple[int, ...], axes: tuple[str | None, ...],
+             dtype=jnp.float32) -> P:
+    """ShapeDtypeStruct-valued P: for dry-run init without allocation."""
+    return P(jax.ShapeDtypeStruct(shape, dtype), axes)
+
+
+def fanin_scale(shape: tuple[int, ...]) -> float:
+    return float(1.0 / np.sqrt(max(1, shape[0])))

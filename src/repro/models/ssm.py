@@ -1,0 +1,228 @@
+"""Mamba-2 SSD (state-space duality) blocks — arXiv:2405.21060.
+
+Training/prefill uses the chunked SSD algorithm formulated as a single
+``lax.scan`` over chunks with the inter-chunk state as carry: intra-chunk
+terms are matmul-friendly (MXU) while memory stays O(chunk) — the compiled
+HLO is O(1) in sequence length, which is what lets the long_500k cells
+lower.  Decode is the linear recurrence on a [B, H, P, N] state.
+
+Block layout (mamba2): in_proj -> (z, xBC, dt); causal depthwise conv + silu
+on xBC; SSD; gated RMSNorm (y * silu(z)); out_proj.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import param as pm
+from .layers import dense, init_dense, init_rmsnorm, rmsnorm
+from ..configs.base import ArchConfig
+
+
+class SsmCache(NamedTuple):
+    conv: jnp.ndarray     # [B, d_conv-1, d_xbc]
+    state: jnp.ndarray    # [B, H, P, N]
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    d_xbc = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, n_heads, d_xbc
+
+
+def init_ssm(key: jax.Array, cfg: ArchConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, h, d_xbc = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_z": init_dense(ks[0], (d, d_inner), ("embed", "mlp")),
+        "in_xbc": init_dense(ks[1], (d, d_xbc), ("embed", "mlp")),
+        "in_dt": init_dense(ks[2], (d, h), ("embed", "heads")),
+        "conv_w": pm.normal(ks[3], (s.d_conv, d_xbc), ("conv", "mlp"),
+                            stddev=0.2),
+        "conv_b": pm.zeros((d_xbc,), ("mlp",)),
+        "a_log": pm.P(jnp.log(jnp.linspace(1.0, 16.0, h)), ("heads",)),
+        "dt_bias": pm.zeros((h,), ("heads",)),
+        "d_skip": pm.ones((h,), ("heads",)),
+        "norm": init_rmsnorm(d_inner),
+        "out": init_dense(ks[4], (d_inner, d), ("mlp", "embed")),
+    }
+
+
+# ----------------------------- SSD core ------------------------------------
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """a: [..., L] -> lower-triangular pairwise sums s[i,j] = sum(a[j+1..i])."""
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    l = a.shape[-1]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(xdt: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
+                c: jnp.ndarray, chunk: int,
+                initial_state: jnp.ndarray | None = None):
+    """Chunked SSD.
+
+    xdt: [B, L, H, P] (inputs pre-scaled by dt), a: [B, L, H] (= dt * A,
+    negative), b/c: [B, L, G, N].  Returns (y [B,L,H,P], final_state
+    [B,H,P,N]).
+    """
+    bsz, l, h, p = xdt.shape
+    g, n = b.shape[2], b.shape[3]
+    hg = h // g
+    nc = -(-l // chunk)
+    pad = nc * chunk - l
+    if pad:
+        xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    def to_chunks(t):
+        return t.reshape((bsz, nc, chunk) + t.shape[2:]).swapaxes(0, 1)
+
+    xc, ac, bc, cc = map(to_chunks, (xdt, a, b, c))    # leading axis = chunk
+
+    if initial_state is None:
+        initial_state = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def step(state, inp):
+        xk, ak, bk, ck = inp                 # [B,cl,H,P], [B,cl,H], [B,cl,G,N]
+        ak = ak.astype(jnp.float32)
+        a_cs = jnp.cumsum(ak, axis=1)                       # [B,cl,H]
+        lmat = jnp.exp(_segsum(ak.swapaxes(1, 2)))          # [B,H,cl,cl]
+        lmat = lmat.astype(xk.dtype)
+        # group -> head expansion via reshape (no materialized repeat)
+        lh = lmat.reshape(bsz, g, hg, chunk, chunk)
+        xh = xk.reshape(bsz, chunk, g, hg, p)
+        # intra-chunk
+        scores = jnp.einsum("blgn,bsgn->bgls", ck, bk)      # [B,cl,cl] per g
+        y_diag = jnp.einsum("bgls,bghls,bsghp->blghp", scores, lh, xh)
+        # contribution of the incoming state
+        decay_out = jnp.exp(a_cs).astype(xk.dtype)          # [B,cl,H]
+        sh = state.astype(xk.dtype).reshape(bsz, g, hg, p, n)
+        y_off = jnp.einsum("blgn,bghpn->blghp", ck, sh)
+        y_off = y_off * decay_out.reshape(bsz, chunk, g, hg)[..., None]
+        y = (y_diag + y_off).reshape(bsz, chunk, h, p)
+        # state update
+        decay_total = jnp.exp(a_cs[:, -1, :])               # [B,H]
+        decay_in = jnp.exp(a_cs[:, -1:, :] - a_cs)          # [B,cl,H]
+        contrib = jnp.einsum("bsgn,bsghp->bghpn",
+                             bk, xh * decay_in.reshape(
+                                 bsz, chunk, g, hg)[..., None])
+        new_state = (state * decay_total[:, :, None, None]
+                     + contrib.reshape(bsz, h, p, n).astype(jnp.float32))
+        return new_state, y
+
+    final, yc = jax.lax.scan(step, initial_state, (xc, ac, bc, cc))
+    y = yc.swapaxes(0, 1).reshape(bsz, nc * chunk, h, p)[:, :l]
+    return y, final
+
+
+def ssd_step(state: jnp.ndarray, x: jnp.ndarray, dt: jnp.ndarray,
+             a_neg: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray):
+    """One-token recurrence.  state [B,H,P,N], x [B,H,P], dt [B,H],
+    a_neg [H], b/c [B,G,N]."""
+    bsz, h, p, n = state.shape
+    g = b.shape[1]
+    hg = h // g
+    da = jnp.exp(dt * a_neg[None, :])                       # [B,H]
+    xdt = x * dt[..., None]
+    bh = jnp.broadcast_to(b[:, :, None, :], (bsz, g, hg, n)).reshape(bsz, h, n)
+    ch = jnp.broadcast_to(c[:, :, None, :], (bsz, g, hg, n)).reshape(bsz, h, n)
+    new_state = (state * da[:, :, None, None]
+                 + xdt[..., None] * bh[:, :, None, :])
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, ch)
+    return new_state.astype(state.dtype), y.astype(x.dtype)
+
+
+# ----------------------------- block apply ----------------------------------
+
+def _conv_train(params, xbc: jnp.ndarray) -> jnp.ndarray:
+    """Causal depthwise conv over [B, L, C]."""
+    k = params["conv_w"].shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        pad, params["conv_w"][:, None, :].astype(xbc.dtype),
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=xbc.shape[-1])
+    return out + params["conv_b"].astype(xbc.dtype)
+
+
+def ssm_apply(params: dict, x: jnp.ndarray, cfg: ArchConfig, *,
+              cache: SsmCache | None = None):
+    """x: [B, L, D] -> (y, new_cache)."""
+    s = cfg.ssm
+    d_inner, h, d_xbc = _dims(cfg)
+    bsz, l, _ = x.shape
+    z = dense(params["in_z"], x, "btd,df->btf")
+    xbc = dense(params["in_xbc"], x, "btd,df->btf")
+    dt_raw = dense(params["in_dt"], x, "btd,df->btf")
+    new_cache = None
+    if cache is not None and l == 1:
+        # decode: roll conv state
+        window = jnp.concatenate([cache.conv, xbc], axis=1)   # [B,k,C]
+        w = params["conv_w"].astype(x.dtype)
+        conv_out = jnp.einsum("bkc,kc->bc", window, w)[:, None, :] \
+            + params["conv_b"].astype(x.dtype)
+        new_conv = window[:, 1:]
+    else:
+        conv_out = _conv_train(params, xbc)
+        new_conv = None
+        if cache is not None:
+            k = s.d_conv
+            tail = jnp.pad(xbc, ((0, 0), (max(0, k - 1 - l), 0), (0, 0)))
+            new_conv = tail[:, -(k - 1):]
+    xbc_act = jax.nn.silu(conv_out)
+    x_ssm = xbc_act[..., :d_inner].reshape(bsz, -1, h, s.head_dim)
+    bmat = xbc_act[..., d_inner:d_inner + s.n_groups * s.d_state]
+    cmat = xbc_act[..., d_inner + s.n_groups * s.d_state:]
+    bmat = bmat.reshape(bsz, -1, s.n_groups, s.d_state)
+    cmat = cmat.reshape(bsz, -1, s.n_groups, s.d_state)
+    # §Perf iter 8: keep the SSD contraction dims local — shard heads over
+    # the model axis, replicate the (small) B/C state operands.  The xbc
+    # channel sharding otherwise splits the state dim N across ranks and
+    # every SSD einsum partial-sums per chunk trip (measured: ~5k
+    # all-reduce calls / 80 GB per step on mamba2 train).
+    from ..distributed.act_sharding import constrain
+    x_ssm = constrain(x_ssm, ("batch", None, "heads", None))
+    bmat = constrain(bmat, ("batch", None, None, None))
+    cmat = constrain(cmat, ("batch", None, None, None))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"]).astype(jnp.float32)
+    a_neg = -jnp.exp(params["a_log"].astype(jnp.float32))
+
+    if cache is not None and l == 1:
+        new_state, y = ssd_step(cache.state, x_ssm[:, 0], dt[:, 0], a_neg,
+                                bmat[:, 0], cmat[:, 0])
+        y = y[:, None]
+        new_cache = SsmCache(conv=new_conv, state=new_state)
+    else:
+        xdt = x_ssm * dt[..., None].astype(x_ssm.dtype)
+        a = dt * a_neg[None, None, :]
+        init = cache.state if cache is not None else None
+        y, final = ssd_chunked(xdt, a, bmat, cmat, s.chunk,
+                               initial_state=init)
+        if cache is not None:
+            new_cache = SsmCache(conv=new_conv, state=final)
+
+    y = y + x_ssm * params["d_skip"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(bsz, -1, d_inner)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return dense(params["out"], y, "btf,fd->btd"), new_cache
+
+
+def init_cache(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16) -> SsmCache:
+    s = cfg.ssm
+    d_inner, h, d_xbc = _dims(cfg)
+    return SsmCache(
+        conv=jnp.zeros((batch, s.d_conv - 1, d_xbc), dtype),
+        state=jnp.zeros((batch, h, s.head_dim, s.d_state), jnp.float32))

@@ -1,0 +1,1 @@
+from .hlo_analyzer import analyze_hlo  # noqa: F401

@@ -1,0 +1,1 @@
+"""Serving: prefill/decode step factories + request batcher."""

@@ -1,0 +1,103 @@
+"""Serving engine: jitted prefill + decode steps and a batched scheduler.
+
+``decode_step`` is the paper's regime: one token against a deep KV cache is
+a skinny, memory-bandwidth-bound op (op/byte ~= 1-2) — exactly what the
+PIM-amenability test flags, and what the decode_attn Pallas kernel and the
+roofline's memory term are about.  Caches are donated so decode runs
+in-place.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from ..distributed import sharding as shd
+from ..models.model_zoo import Model
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_len: int
+    batch: int
+    dtype: Any = jnp.bfloat16
+    temperature: float = 0.0     # 0 = greedy
+
+
+def make_decode_step(model: Model, cfg: ServeConfig):
+    def step(params, tokens, caches, cache_len, extra):
+        logits, caches = model.decode_step(params, tokens, caches, cache_len,
+                                           dtype=cfg.dtype,
+                                           extra=extra or None)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], caches
+    return step
+
+
+def jit_decode_step(model: Model, cfg: ServeConfig, mesh: Mesh,
+                    input_specs: dict):
+    step = make_decode_step(model, cfg)
+    pshard = shd.param_shardings(model.abstract_ptree(), mesh)
+    tok_shard = shd.data_shardings(input_specs["tokens"], mesh)
+    cache_shard = shd.cache_shardings(input_specs["caches"], mesh)
+    extra_shard = shd.data_shardings(input_specs.get("extra", {}), mesh)
+    return jax.jit(
+        step,
+        in_shardings=(pshard, tok_shard, cache_shard,
+                      shd.replicated(mesh), extra_shard),
+        out_shardings=(tok_shard, cache_shard),
+        donate_argnums=(2,))
+
+
+def make_prefill(model: Model, cfg: ServeConfig):
+    def prefill(params, batch):
+        return model.prefill(params, batch, cfg.max_len, dtype=cfg.dtype)
+    return prefill
+
+
+class Batcher:
+    """Greedy continuous batcher over a fixed decode batch (host-side).
+
+    Requests are (id, prompt tokens); finished slots (EOS or length) are
+    refilled from the queue.  This is the host-side loop a serving pod
+    runs; the device work is the jitted prefill/decode steps above.
+    """
+
+    def __init__(self, model: Model, params, cfg: ServeConfig,
+                 eos_id: int = 0):
+        self.model, self.params, self.cfg = model, params, cfg
+        self.eos = eos_id
+        self.queue: list[tuple[int, list[int]]] = []
+        self.results: dict[int, list[int]] = {}
+
+    def submit(self, rid: int, prompt: list[int]) -> None:
+        self.queue.append((rid, prompt))
+
+    def run(self, max_new: int = 16) -> dict[int, list[int]]:
+        cfg = self.cfg
+        while self.queue:
+            batch = [self.queue.pop(0)
+                     for _ in range(min(cfg.batch, len(self.queue)))]
+            width = max(len(p) for _, p in batch)
+            toks = jnp.zeros((cfg.batch, width), jnp.int32)
+            for i, (_, p) in enumerate(batch):
+                toks = toks.at[i, :len(p)].set(jnp.asarray(p, jnp.int32))
+            logits, caches = self.model.prefill(
+                self.params, {"tokens": toks}, cfg.max_len, dtype=cfg.dtype)
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+            outs = [[] for _ in batch]
+            length = jnp.asarray(width, jnp.int32)
+            for _ in range(max_new):
+                for i in range(len(batch)):
+                    outs[i].append(int(tok[i, 0]))
+                logits, caches = self.model.decode_step(
+                    self.params, tok, caches, length, dtype=cfg.dtype)
+                tok = jnp.argmax(logits[:, -1], axis=-1).astype(
+                    jnp.int32)[:, None]
+                length = length + 1
+            for (rid, _), out in zip(batch, outs):
+                self.results[rid] = out
+        return self.results

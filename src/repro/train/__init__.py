@@ -1,0 +1,1 @@
+"""Training: optimizer, step factory, grad accumulation, remat."""

@@ -1,0 +1,49 @@
+"""PIM-amenability-test unit tests (§3 semantics)."""
+from repro.core.amenability import (Interaction, PrimitiveProfile, Verdict,
+                                    run_test)
+from repro.core.primitives import push, ss_gemm, vector_sum, wavesim
+from repro.core.primitives.graphs import powerlaw
+
+
+def test_vector_sum_amenable():
+    rep = run_test(vector_sum.profile(vector_sum.Problem(1 << 20)))
+    assert rep.verdict is Verdict.AMENABLE
+
+
+def test_compute_bound_rejected():
+    p = PrimitiveProfile("big-gemm", ops=1e12, mem_bytes=1e6,
+                         onchip_bytes=1e9, interaction=Interaction.LOCALIZED,
+                         alignable=True)
+    rep = run_test(p)
+    assert rep.verdict is Verdict.NOT_AMENABLE
+    assert "compute-bound" in rep.guidance
+
+
+def test_push_conditional_with_predictor_guidance():
+    g = powerlaw(100_000, 1_000_000)
+    rep = run_test(push.profile(g))
+    assert rep.verdict is Verdict.CONDITIONAL
+    assert "predictor" in rep.guidance or "single-bank" in rep.guidance
+
+
+def test_ssgemm_conditional_and_wavesim_profiles():
+    rep = run_test(ss_gemm.profile(ss_gemm.Problem(n=4)))
+    assert rep.verdict in (Verdict.AMENABLE, Verdict.CONDITIONAL)
+    wp = wavesim.Problem()
+    pv = wavesim.profile_volume(wp)
+    pf = wavesim.profile_flux(wp)
+    # paper: wavesim op/byte in 0.43-1.72
+    assert 0.3 < pv.op_byte < 2.5
+    assert 0.3 < pf.op_byte < 2.5
+
+
+def test_ssgemm_opbyte_tracks_n():
+    """op/byte ~ N for skinny GEMMs (§3.2)."""
+    obs = [ss_gemm.profile(ss_gemm.Problem(n=n)).op_byte for n in (2, 4, 8)]
+    assert obs[0] < obs[1] < obs[2]
+
+
+def test_report_renders():
+    rep = run_test(vector_sum.profile(vector_sum.Problem(1024)))
+    s = rep.summary()
+    assert "vector-sum" in s and "guidance" in s

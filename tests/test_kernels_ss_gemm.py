@@ -1,0 +1,48 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ss_gemm import ssgemm_compact, ssgemm_masked
+from repro.kernels.ss_gemm.ops import block_occupancy
+from repro.kernels.ss_gemm.ref import ssgemm_ref
+
+
+def make(m, k, n, density, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    b = rng.standard_normal((k, n)).astype(np.float32)
+    b[rng.random(k) > density] = 0.0
+    return jnp.asarray(a, dtype), jnp.asarray(b, dtype)
+
+
+@pytest.mark.parametrize("m,k,n", [(256, 256, 2), (512, 384, 4),
+                                   (128, 1024, 8), (384, 512, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_masked_sweep(m, k, n, dtype):
+    a, b = make(m, k, n, density=0.4, dtype=dtype, seed=m + n)
+    out = ssgemm_masked(a, b, bm=128, bk=128)
+    ref = ssgemm_ref(a, b)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(out, ref, rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("density", [0.0, 0.05, 0.5, 1.0])
+def test_masked_density_extremes(density):
+    a, b = make(256, 512, 4, density, jnp.float32, seed=3)
+    out = ssgemm_masked(a, b, bm=128, bk=128)
+    np.testing.assert_allclose(out, ssgemm_ref(a, b), rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("budget", [1, 2, 4, 8])
+def test_compact_budgets(budget):
+    """Exact for any budget: overflow falls back to the dense path."""
+    a, b = make(256, 1024, 4, density=0.25, dtype=jnp.float32, seed=7)
+    out = ssgemm_compact(a, b, budget=budget, bm=128, bk=128)
+    np.testing.assert_allclose(out, ssgemm_ref(a, b), rtol=1e-4, atol=1e-3)
+
+
+def test_occupancy_mask():
+    _, b = make(8, 512, 4, density=0.3, dtype=jnp.float32, seed=11)
+    mask = np.asarray(block_occupancy(b, 128))
+    bb = np.asarray(b).reshape(4, 128, 4)
+    np.testing.assert_array_equal(mask, (bb != 0).any(axis=(1, 2)))

@@ -1,0 +1,28 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.vector_sum import vector_sum
+from repro.kernels.vector_sum.ref import vector_sum_ref
+
+
+@pytest.mark.parametrize("n", [1, 7, 512, 4096, 10_000])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_vector_sum(n, dtype):
+    rng = np.random.default_rng(n)
+    a = jnp.asarray(rng.standard_normal(n), dtype)
+    b = jnp.asarray(rng.standard_normal(n), dtype)
+    out = vector_sum(a, b)
+    ref = vector_sum_ref(a, b)
+    tol = 1e-6 if dtype == jnp.float32 else 1e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_vector_sum_nd():
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((3, 5, 7)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((3, 5, 7)), jnp.float32)
+    np.testing.assert_allclose(vector_sum(a, b), vector_sum_ref(a, b),
+                               rtol=1e-6)

@@ -1,0 +1,48 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.wavesim_flux import flux1d
+from repro.kernels.wavesim_flux.ref import flux1d_ref
+from repro.kernels.wavesim_volume import volume
+from repro.kernels.wavesim_volume.ref import volume_ref
+
+
+@pytest.mark.parametrize("e,f", [(1, 1), (8, 9), (65, 27), (256, 3)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_volume_sweep(e, f, dtype):
+    rng = np.random.default_rng(e * 31 + f)
+    u = jnp.asarray(rng.standard_normal((e, f, 3, 3, 3)), dtype)
+    out = volume(u, 0.7)
+    ref = volume_ref(u, 0.7)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("e,t", [(4, 9), (256, 36), (600, 27), (1024, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flux_sweep(e, t, dtype):
+    rng = np.random.default_rng(e + t)
+    hi = jnp.asarray(rng.standard_normal((e, t)), dtype)
+    lo = jnp.asarray(rng.standard_normal((e, t)), dtype)
+    fh, fl = flux1d(hi, lo, 0.5)
+    rh, rl = flux1d_ref(hi, lo, 0.5)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(fh, np.float32),
+                               np.asarray(rh, np.float32), rtol=tol,
+                               atol=tol)
+    np.testing.assert_allclose(np.asarray(fl, np.float32),
+                               np.asarray(rl, np.float32), rtol=tol,
+                               atol=tol)
+
+
+def test_volume_is_linear_operator():
+    """Property: volume(au + bv) == a*volume(u) + b*volume(v)."""
+    rng = np.random.default_rng(0)
+    u = jnp.asarray(rng.standard_normal((4, 9, 3, 3, 3)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((4, 9, 3, 3, 3)), jnp.float32)
+    lhs = volume(2.0 * u + 3.0 * v)
+    rhs = 2.0 * volume(u) + 3.0 * volume(v)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,128 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache_model import LruCache
+from repro.core.commands import Kind, Loop, Seg, Subset, total_commands
+from repro.core.hwspec import PimSpec
+from repro.core.optimizations import (Phase, arch_aware_schedule,
+                                      baseline_schedule, cache_split,
+                                      sparsity_thin)
+from repro.core.timing import simulate
+
+PIM = PimSpec()
+jst = st.integers
+
+
+@settings(max_examples=40, deadline=None)
+@given(cmds=jst(1, 64), trips=jst(1, 200), phases=jst(1, 6))
+def test_arch_aware_never_slower(cmds, trips, phases):
+    """Invariant: decoupled activation never loses to the baseline
+    schedule (it only removes stalls, never adds commands... beyond the
+    split ACT's extra issue slots, which are bounded by the saved stalls)."""
+    ph = [Phase(cmds)] * phases
+    base = simulate(baseline_schedule(ph, trips), PIM)
+    opt = simulate(arch_aware_schedule(ph, trips), PIM)
+    assert opt.time_ns <= base.time_ns * 1.02   # 2% slack: ACT issue slots
+
+
+@settings(max_examples=40, deadline=None)
+@given(cmds=jst(1, 40), trips=jst(1, 100), phases=jst(1, 5))
+def test_schedules_equal_compute_commands(cmds, trips, phases):
+    """Functional equivalence proxy: both schedules issue the same number
+    of compute commands (the optimization only moves activations)."""
+    from repro.core.commands import total_by_kind
+    ph = [Phase(cmds)] * phases
+    b = total_by_kind(baseline_schedule(ph, trips))
+    o = total_by_kind(arch_aware_schedule(ph, trips))
+    assert b[Kind.PIM_BCAST] == o[Kind.PIM_BCAST]
+
+
+@settings(max_examples=40, deadline=None)
+@given(cmds=jst(0, 10_000),
+       density=st.floats(0.0, 1.0, allow_nan=False))
+def test_sparsity_thin_bounds(cmds, density):
+    out = sparsity_thin(cmds, density)
+    assert 0 <= out <= cmds or (cmds == 0 and out == 0)
+    if density == 1.0:
+        assert out == cmds
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=jst(0, 10_000), h=st.floats(0.0, 1.0, allow_nan=False))
+def test_cache_split_partition(n, h):
+    s = cache_split(n, h)
+    assert s.hot + s.cold == n
+    assert 0 <= s.hot <= n
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=jst(0, 1000), length=jst(1, 400))
+def test_lru_hit_rate_bounds_and_repeat_hits(seed, length):
+    rng = np.random.default_rng(seed)
+    addrs = rng.integers(0, 1 << 20, size=length) * 64
+    c = LruCache(capacity_bytes=64 * 1024, ways=4)
+    r1 = c.run_trace(addrs)
+    assert 0 <= r1.hit_rate <= 1
+    # immediately replaying a short suffix must hit (working set cached)
+    tail = addrs[-8:]
+    r2 = c.run_trace(tail)
+    assert r2.hit_rate == 1.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=jst(0, 100), trips=jst(1, 30), cmds=jst(1, 30))
+def test_loop_compression_exact(seed, trips, cmds):
+    """Steady-state loop evaluation == full unroll, for random bodies."""
+    rng = np.random.default_rng(seed)
+    body = []
+    for _ in range(rng.integers(1, 5)):
+        if rng.random() < 0.4:
+            body.append(Seg(Kind.ACT, Subset.ALL))
+        else:
+            sub = Subset.EVEN if rng.random() < 0.5 else Subset.ODD
+            body.append(Seg(Kind.PIM_BCAST, sub, cmds))
+    looped = simulate([Loop(tuple(body), trips)], PIM)
+    unrolled = simulate(list(body) * trips, PIM)
+    assert abs(looped.time_ns - unrolled.time_ns) < 1e-6 * max(
+        1.0, unrolled.time_ns)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=jst(0, 50))
+def test_moe_routing_conservation(seed):
+    """Router weights are normalized and dispatch conserves token mass
+    (within capacity drops)."""
+    from repro.configs import get_config
+    from repro.models import param as pm
+    from repro.models.moe import init_moe, route
+    cfg = get_config("moonshot-v1-16b-a3b").reduced()
+    params = pm.unwrap(init_moe(jax.random.key(seed), cfg))
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((16, cfg.d_model)), jnp.float32)
+    w, ids, probs = route(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, rtol=1e-5)
+    assert int(ids.max()) < cfg.moe.n_experts
+    np.testing.assert_allclose(np.asarray(probs.sum(-1)), 1.0, rtol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=jst(0, 50), chunk=st.sampled_from([2, 4, 8]))
+def test_ssd_chunk_invariance(seed, chunk):
+    """SSD output must not depend on the chunk size (algebraic identity)."""
+    from repro.models.ssm import ssd_chunked
+    rng = np.random.default_rng(seed)
+    b, l, h, p, n = 1, 16, 2, 4, 8
+    xdt = jnp.asarray(rng.standard_normal((b, l, h, p)) * 0.3, jnp.float32)
+    a = jnp.asarray(-np.abs(rng.standard_normal((b, l, h))) * 0.3,
+                    jnp.float32)
+    bm = jnp.asarray(rng.standard_normal((b, l, 1, n)) * 0.3, jnp.float32)
+    cm = jnp.asarray(rng.standard_normal((b, l, 1, n)) * 0.3, jnp.float32)
+    y1, s1 = ssd_chunked(xdt, a, bm, cm, chunk)
+    y2, s2 = ssd_chunked(xdt, a, bm, cm, l)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=2e-4,
+                               atol=2e-4)

@@ -1,0 +1,75 @@
+"""Runtime serving path (jitted decode step with cache shardings) and
+elastic re-shard/restore behavior on the host mesh."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.configs import get_config
+from repro.data import DataConfig, DataPipeline
+from repro.distributed import sharding as shd
+from repro.models import param as pm
+from repro.models.model_zoo import Model
+from repro.serve.engine import ServeConfig, jit_decode_step
+
+
+def _host_mesh():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         devices=jax.devices()[:1])
+
+
+def test_jit_decode_step_executes_with_cache_shardings():
+    """The same step the dry-run lowers, executed for real on a mesh:
+    param/cache shardings apply and greedy decode advances."""
+    cfg = get_config("qwen2-0.5b").reduced()
+    model = Model(cfg)
+    mesh = _host_mesh()
+    params = pm.unwrap(model.init(jax.random.key(0)))
+    scfg = ServeConfig(max_len=32, batch=2, dtype=jnp.float32)
+    # build specs the way dryrun does
+    from repro.configs.base import ShapeConfig
+    shape = ShapeConfig("t", 32, 2, "decode")
+    specs = model.input_specs(shape, dtype=jnp.float32)
+    step = jit_decode_step(model, scfg, mesh, specs)
+    caches = model.init_caches(2, 32, jnp.float32)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    tok2, caches = step(params, tok, caches, jnp.asarray(0, jnp.int32), {})
+    tok3, caches = step(params, tok2, caches, jnp.asarray(1, jnp.int32), {})
+    assert tok3.shape == (2, 1)
+    assert np.isfinite(np.asarray(tok3)).all()
+
+
+def test_data_pipeline_reshard_partition():
+    """Elastic re-shard: two half-shards of the resharded stream jointly
+    cover a different partition of the same deterministic stream."""
+    cfg = DataConfig(vocab=64, seq_len=8, global_batch=8, seed=3)
+    p = DataPipeline(cfg)
+    for _ in range(4):
+        next(p)
+    q0 = p.reshard(2, 0)
+    q1 = p.reshard(2, 1)
+    assert q0.step == p.step == q1.step
+    b0, b1 = q0.batch_at(q0.step), q1.batch_at(q1.step)
+    assert b0["tokens"].shape == (4, 8) and b1["tokens"].shape == (4, 8)
+    # shards are deterministic and distinct
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+    np.testing.assert_array_equal(b0["tokens"],
+                                  p.reshard(2, 0).batch_at(q0.step)["tokens"])
+
+
+def test_elastic_checkpoint_restore_with_shardings(tmp_path):
+    """Restore a checkpoint placing leaves with mesh shardings (the
+    restore-onto-a-new-mesh path ElasticPlan drives)."""
+    cfg = get_config("qwen2-0.5b").reduced()
+    model = Model(cfg)
+    params = pm.unwrap(model.init(jax.random.key(1)))
+    ck = Checkpointer(tmp_path)
+    ck.save(3, params)
+    mesh = _host_mesh()
+    shardings = shd.param_shardings(model.abstract_ptree(), mesh)
+    restored, manifest = ck.restore(params, shardings=shardings)
+    assert manifest["step"] == 3
+    leaf = jax.tree_util.tree_leaves(restored)[0]
+    assert hasattr(leaf, "sharding")
+    before = jax.tree_util.tree_leaves(params)[0]
+    np.testing.assert_allclose(np.asarray(leaf), np.asarray(before))

@@ -1,0 +1,152 @@
+"""Data pipeline / checkpoint / fault-tolerance / compression tests."""
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+from repro.data import DataConfig, DataPipeline
+from repro.distributed.compression import compress_leaf, compress_tree
+from repro.ft import ElasticPlan, FailureInjector, StragglerMonitor
+from repro.ft.elastic import SimulatedFailure
+
+
+# ------------------------------- data -------------------------------------
+
+def test_data_determinism():
+    cfg = DataConfig(vocab=100, seq_len=16, global_batch=4, seed=7)
+    a = DataPipeline(cfg).batch_at(3)
+    b = DataPipeline(cfg).batch_at(3)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+def test_data_sharding_partitions_global_batch():
+    cfg = DataConfig(vocab=100, seq_len=8, global_batch=8, seed=1)
+    full = DataPipeline(cfg).batch_at(0)["tokens"]
+    cfg2 = DataConfig(vocab=100, seq_len=8, global_batch=8, seed=1,
+                      n_shards=2, shard=0)
+    s0 = DataPipeline(cfg2).batch_at(0)["tokens"]
+    assert s0.shape == (4, 8)
+    assert full.shape == (8, 8)
+
+
+def test_data_checkpoint_resume():
+    cfg = DataConfig(vocab=50, seq_len=8, global_batch=2)
+    p = DataPipeline(cfg)
+    for _ in range(5):
+        next(p)
+    state = p.state_dict()
+    expected = p.batch_at(p.step)["tokens"]
+    q = DataPipeline(cfg)
+    q.load_state_dict(state)
+    np.testing.assert_array_equal(next(q)["tokens"], expected)
+
+
+def test_data_prefetch_thread():
+    cfg = DataConfig(vocab=50, seq_len=8, global_batch=2)
+    p = DataPipeline(cfg)
+    want = [p.batch_at(i)["tokens"] for i in range(3)]
+    p.start_prefetch()
+    got = [p.next_prefetched()["tokens"] for _ in range(3)]
+    p.stop()
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w, g)
+
+
+# ----------------------------- checkpoint ---------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    ck = Checkpointer(tmp_path, keep=2)
+    state = {"params": {"w": jnp.arange(6.0).reshape(2, 3)},
+             "opt": {"step": jnp.asarray(5)},
+             "nested": [jnp.ones(3), {"b": jnp.zeros(2)}]}
+    ck.save(5, state, extra={"note": "x"})
+    restored, manifest = ck.restore(state)
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(state["params"]["w"]))
+    assert manifest["step"] == 5 and manifest["extra"]["note"] == "x"
+
+
+def test_checkpoint_gc_and_latest(tmp_path):
+    ck = Checkpointer(tmp_path, keep=2)
+    state = {"w": jnp.zeros(2)}
+    for s in (1, 2, 3):
+        ck.save(s, state)
+    assert ck.all_steps() == [2, 3]
+    assert ck.latest_step() == 3
+
+
+def test_checkpoint_async_and_atomic(tmp_path):
+    ck = Checkpointer(tmp_path)
+    state = {"w": jnp.full((128, 128), 3.0)}
+    ck.save_async(7, state)
+    ck.wait()
+    restored, m = ck.restore(state)
+    assert m["step"] == 7
+    assert not list(pathlib.Path(tmp_path).glob("*.tmp"))
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    ck = Checkpointer(tmp_path)
+    ck.save(1, {"w": jnp.zeros(4)})
+    with pytest.raises(ValueError):
+        ck.restore({"w": jnp.zeros(5)})
+
+
+# ------------------------------- ft ---------------------------------------
+
+def test_failure_injector():
+    inj = FailureInjector((3,))
+    inj.check(2)
+    with pytest.raises(SimulatedFailure):
+        inj.check(3)
+    inj.check(3)    # fires once
+    assert inj.triggered == [3]
+
+
+def test_elastic_plan_prefers_model_axis():
+    plan = ElasticPlan.for_devices(512, model=16, prefer_pods=2)
+    assert plan.model == 16 and plan.n_devices == 512
+    degraded = ElasticPlan.for_devices(496, model=16, prefer_pods=2)
+    assert degraded.model == 16
+    assert degraded.n_devices <= 496
+    tiny = ElasticPlan.for_devices(8, model=16)
+    assert tiny.model <= 8
+
+
+def test_straggler_monitor_flags_outliers():
+    import time
+    mon = StragglerMonitor(threshold=1.5, window=16)
+    for i in range(12):
+        mon.step_start()
+        time.sleep(0.001)
+        mon.step_end(i)
+    mon.step_start()
+    time.sleep(0.05)
+    assert mon.step_end(12) is True
+    assert 12 in mon.flags
+
+
+# --------------------------- compression ----------------------------------
+
+def test_compress_leaf_error_feedback_converges():
+    """EF property: accumulated quantized sum tracks the true sum."""
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.standard_normal(256), jnp.float32)
+    ef = jnp.zeros(256)
+    acc = np.zeros(256)
+    for _ in range(50):
+        deq, ef = compress_leaf(g_true, ef)
+        acc += np.asarray(deq)
+    np.testing.assert_allclose(acc / 50, np.asarray(g_true), atol=2e-2)
+
+
+def test_compress_tree_structure():
+    g = {"a": jnp.ones(8), "b": [jnp.zeros(4), jnp.full(2, 2.0)]}
+    ef = jax.tree_util.tree_map(jnp.zeros_like, g)
+    out, ef2 = compress_tree(g, ef)
+    assert jax.tree_util.tree_structure(out) == \
+        jax.tree_util.tree_structure(g)
+    np.testing.assert_allclose(np.asarray(out["a"]), 1.0, atol=1e-2)

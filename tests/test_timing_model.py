@@ -1,0 +1,99 @@
+"""Unit tests for the pim-command IR + DRAM timing engine."""
+import pytest
+
+from repro.core.commands import Kind, Loop, Seg, Subset, total_by_kind, total_commands
+from repro.core.hwspec import PimSpec
+from repro.core.optimizations import Phase, arch_aware_schedule, baseline_schedule
+from repro.core.timing import simulate
+
+PIM = PimSpec()
+
+
+def test_spec_bandwidth_identities():
+    assert abs(PIM.regular_bytes_per_ns_per_pch * PIM.pch_per_stack
+               - 614.4) < 1e-6
+    assert abs(PIM.pim_peak_gbps - 4 * 614.4) < 1e-6
+    assert PIM.cols_per_row == 32
+    assert PIM.banks_per_subset == 8
+
+
+def test_command_counting():
+    stream = [Loop((Seg(Kind.ACT, Subset.ALL),
+                    Seg(Kind.PIM_BCAST, Subset.EVEN, 8),
+                    Seg(Kind.PIM_BCAST, Subset.ODD, 8)), 10)]
+    assert total_commands(stream) == 170
+    by = total_by_kind(stream)
+    assert by[Kind.ACT] == 10 and by[Kind.PIM_BCAST] == 160
+
+
+def test_bcast_issue_rate():
+    """Pure compute stream runs at one command per tCCDL."""
+    st = simulate([Seg(Kind.PIM_BCAST, Subset.EVEN, 100)], PIM)
+    assert st.time_ns == pytest.approx(100 * PIM.t_ccdl_ns, rel=1e-6)
+
+
+def test_activation_blocks_compute():
+    st = simulate([Seg(Kind.ACT, Subset.EVEN),
+                   Seg(Kind.PIM_BCAST, Subset.EVEN, 1)], PIM)
+    # row ready tRP+tRCD after the ACT's slot, then one command
+    assert st.time_ns >= PIM.row_switch_ns
+    assert st.act_stall_ns > 0
+
+
+def test_opposite_subset_not_blocked():
+    """Compute on ODD proceeds while EVEN activates (the §5.1.1 overlap)."""
+    st = simulate([Seg(Kind.ACT, Subset.EVEN),
+                   Seg(Kind.PIM_BCAST, Subset.ODD, 20)], PIM)
+    assert st.act_stall_ns == 0.0
+
+
+def test_arch_aware_beats_baseline():
+    phases = [Phase(8), Phase(8), Phase(8)]
+    base = simulate(baseline_schedule(phases, 200), PIM)
+    opt = simulate(arch_aware_schedule(phases, 200), PIM)
+    assert opt.time_ns < base.time_ns
+    assert opt.act_stall_frac < base.act_stall_frac
+
+
+def test_arch_aware_gain_needs_commands_per_phase():
+    """Short phases can't hide activation latency (the flux@16regs story)."""
+    short = [Phase(2)] * 6
+    long_ = [Phase(24)] * 6
+    gain_short = (simulate(baseline_schedule(short, 500), PIM).time_ns
+                  / simulate(arch_aware_schedule(short, 500), PIM).time_ns)
+    gain_long = (simulate(baseline_schedule(long_, 500), PIM).time_ns
+                 / simulate(arch_aware_schedule(long_, 500), PIM).time_ns)
+    assert gain_long > gain_short
+
+
+def test_loop_steady_state_matches_unrolled():
+    body = (Seg(Kind.ACT, Subset.ALL), Seg(Kind.PIM_BCAST, Subset.EVEN, 8),
+            Seg(Kind.PIM_BCAST, Subset.ODD, 8))
+    looped = simulate([Loop(body, 50)], PIM)
+    unrolled = simulate(list(body) * 50, PIM)
+    assert looped.time_ns == pytest.approx(unrolled.time_ns, rel=1e-9)
+    assert looped.n_cmds == unrolled.n_cmds
+
+
+def test_single_bank_command_bus_bound():
+    """push-style: 2 cmds/update, one data-less -> command-bus limited."""
+    segs = [Seg(Kind.PIM_SB, Subset.ALL, 1000, carries_data=True,
+                row_hit_frac=0.9),
+            Seg(Kind.PIM_SB, Subset.ALL, 1000, carries_data=False,
+                row_hit_frac=1.0)]
+    st = simulate(segs, PIM)
+    assert st.time_ns == pytest.approx(2000 * PIM.t_ccds_ns, rel=1e-6)
+    # 4x command bandwidth -> data bus becomes the limit
+    pim4 = PimSpec(command_bw_mult=4.0)
+    st4 = simulate(segs, pim4)
+    assert st4.time_ns == pytest.approx(1000 * PIM.t_ccds_ns, rel=1e-6)
+    assert st4.time_ns < st.time_ns
+
+
+def test_single_bank_activation_bound():
+    """Row-missing scattered updates become activation-throughput bound."""
+    seg = [Seg(Kind.PIM_SB, Subset.ALL, 1000, carries_data=True,
+               row_hit_frac=0.0)]
+    st = simulate(seg, PimSpec(command_bw_mult=4.0))
+    expect = 1000 * PIM.row_cycle_ns / PIM.banks_per_pch
+    assert st.time_ns == pytest.approx(expect, rel=1e-6)
