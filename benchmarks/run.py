@@ -43,6 +43,15 @@ def main() -> None:
         headline.run(t)
         t.emit()
 
+        try:
+            from . import serve_bench
+            t = Table("Serving — per-token host loop vs device-resident "
+                      "engine")
+            serve_bench.run(t)
+            t.emit()
+        except Exception as exc:
+            print(f"# serve bench skipped: {exc}", file=sys.stderr)
+
         from . import limit_studies
         t = Table("Limit studies — registers x command bandwidth (§5.1.4)")
         limit_studies.run(t)

@@ -1,0 +1,149 @@
+"""Serving throughput: seed per-token host loop vs device-resident engine.
+
+The seed ``Batcher`` ran decode as a per-token Python loop — eager
+dispatch, host argmax, a fresh padded batch per round, O(n^2) queue drain.
+The engine replaces that with slot-based continuous batching over a jitted
+``lax.scan`` (repro.serve.scheduler).  This benchmark times both on the
+same request set and reports tokens/sec:
+
+  PYTHONPATH=src python benchmarks/serve_bench.py [--smoke] [--arch A]
+
+``--smoke`` is the CI sanity mode (~5 s): engine only, asserts a nonzero
+throughput.  The full mode asserts the engine beats the seed loop >= 3x.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
+
+import jax          # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_config              # noqa: E402
+from repro.models import param as pm              # noqa: E402
+from repro.models.model_zoo import Model          # noqa: E402
+from repro.serve.engine import ServeConfig        # noqa: E402
+from repro.serve.scheduler import Batcher         # noqa: E402
+
+
+def make_requests(vocab: int, n: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return [(rid, rng.integers(0, vocab,
+                               size=int(rng.integers(4, 12))).tolist())
+            for rid in range(n)]
+
+
+def seed_batcher_run(model, params, cfg: ServeConfig, requests, max_new):
+    """The seed Batcher.run loop, verbatim semantics: padded batch rounds,
+    eager per-token decode with host-side argmax, list.pop(0) drain."""
+    queue = [(rid, list(p)) for rid, p in requests]
+    results = {}
+    while queue:
+        batch = [queue.pop(0) for _ in range(min(cfg.batch, len(queue)))]
+        width = max(len(p) for _, p in batch)
+        toks = jnp.zeros((cfg.batch, width), jnp.int32)
+        for i, (_, p) in enumerate(batch):
+            toks = toks.at[i, :len(p)].set(jnp.asarray(p, jnp.int32))
+        logits, caches = model.prefill(
+            params, {"tokens": toks}, cfg.max_len, dtype=cfg.dtype)
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        outs = [[] for _ in batch]
+        length = jnp.asarray(width, jnp.int32)
+        for _ in range(max_new):
+            for i in range(len(batch)):
+                outs[i].append(int(tok[i, 0]))
+            logits, caches = model.decode_step(
+                params, tok, caches, length, dtype=cfg.dtype)
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+            length = length + 1
+        for (rid, _), out in zip(batch, outs):
+            results[rid] = out
+    return results
+
+
+def engine_run(model, params, cfg: ServeConfig, requests, max_new):
+    b = Batcher(model, params, cfg)
+    for rid, p in requests:
+        b.submit(rid, p)
+    return b.run(max_new=max_new)
+
+
+def bench(arch: str = "qwen2-0.5b", *, batch: int = 4, requests: int = 12,
+          max_new: int = 24, max_len: int = 96, sync_every: int = 8,
+          smoke: bool = False, seed: int = 0) -> dict:
+    cfg = get_config(arch).reduced()
+    model = Model(cfg)
+    params = pm.unwrap(model.init(jax.random.key(seed)))
+    scfg = ServeConfig(max_len=max_len, batch=batch, sync_every=sync_every)
+    reqs = make_requests(cfg.vocab, requests, seed)
+
+    # engine: one warmup drain compiles the join/segment executables; the
+    # timed drain is the steady serving state (same shapes, zero retraces).
+    # Smoke mode skips the warmup — it only sanity-checks liveness.
+    if not smoke:
+        engine_run(model, params, scfg, reqs, max_new)
+    t0 = time.perf_counter()
+    got = engine_run(model, params, scfg, reqs, max_new)
+    dt_engine = time.perf_counter() - t0
+    toks = sum(len(v) for v in got.values())
+    out = {"arch": arch, "tokens": toks,
+           "engine_tok_s": toks / dt_engine, "engine_s": dt_engine}
+
+    if not smoke:
+        t0 = time.perf_counter()
+        ref = seed_batcher_run(model, params, scfg, reqs, max_new)
+        dt_seed = time.perf_counter() - t0
+        seed_toks = sum(len(v) for v in ref.values())
+        out.update({"seed_tok_s": seed_toks / dt_seed, "seed_s": dt_seed,
+                    "speedup": (toks / dt_engine) / (seed_toks / dt_seed)})
+    return out
+
+
+def run(table) -> None:
+    """Hook for benchmarks.run: one engine-vs-seed row at smoke scale."""
+    r = bench(requests=8, max_new=16, batch=4)
+    table.add("serve seed per-token loop", r["seed_s"] * 1e9,
+              f"{r['seed_tok_s']:.1f} tok/s")
+    table.add("serve device-resident engine", r["engine_s"] * 1e9,
+              f"{r['engine_tok_s']:.1f} tok/s ({r['speedup']:.1f}x)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--max-len", type=int, default=96)
+    ap.add_argument("--sync-every", type=int, default=8)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI sanity: engine only, tiny sizes, ~5s")
+    args = ap.parse_args()
+    if args.smoke:
+        r = bench(args.arch, batch=2, requests=3, max_new=4, max_len=32,
+                  sync_every=4, smoke=True)
+        assert r["engine_tok_s"] > 0, r
+        print(f"[serve_bench --smoke] {r['tokens']} tokens, "
+              f"{r['engine_tok_s']:.1f} tok/s on {jax.default_backend()}")
+        return
+    r = bench(args.arch, batch=args.batch, requests=args.requests,
+              max_new=args.max_new, max_len=args.max_len,
+              sync_every=args.sync_every)
+    print(f"[serve_bench] arch={r['arch']} tokens={r['tokens']} "
+          f"backend={jax.default_backend()}")
+    print(f"  seed per-token loop : {r['seed_tok_s']:8.1f} tok/s "
+          f"({r['seed_s']:.2f}s)")
+    print(f"  device-resident loop: {r['engine_tok_s']:8.1f} tok/s "
+          f"({r['engine_s']:.2f}s)")
+    print(f"  speedup             : {r['speedup']:.2f}x")
+    assert r["speedup"] >= 3.0, \
+        f"serving regressed: engine only {r['speedup']:.2f}x the seed loop"
+
+
+if __name__ == "__main__":
+    main()

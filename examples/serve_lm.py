@@ -1,4 +1,5 @@
-"""Batched serving example: continuous batching over the decode step.
+"""Batched serving example: slot-based continuous batching over the
+device-resident decode loop.
 
   PYTHONPATH=src python examples/serve_lm.py --arch qwen2-0.5b
 """
@@ -12,9 +13,13 @@ def main() -> None:
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--sync-every", type=int, default=8)
+    ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
     out = run(args.arch, reduced=True, requests=args.requests,
-              max_new=args.max_new, batch=4, max_len=64)
+              max_new=args.max_new, batch=args.batch, max_len=64,
+              sync_every=args.sync_every, temperature=args.temperature)
     for rid, toks in sorted(out["results"].items()):
         print(f"request {rid}: {toks}")
 

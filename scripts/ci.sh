@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# CI gate: tier-1 tests + a serving-throughput liveness check.
+#
+#   scripts/ci.sh          # from anywhere inside the repo
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1: pytest =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+
+echo "== serving throughput smoke =="
+timeout 300 python benchmarks/serve_bench.py --smoke

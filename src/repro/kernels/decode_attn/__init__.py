@@ -1,1 +1,2 @@
-from .ops import decode_attn  # noqa: F401
+from .ops import (DecodeAttnPolicy, active_policy,  # noqa: F401
+                  decode_attn, decode_attn_policy)

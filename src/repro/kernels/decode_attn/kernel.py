@@ -9,6 +9,13 @@ open row), and the output is written once at the end.  The (B, Hkv) grid
 dims are embarrassingly parallel (bank-level parallelism); the KV-block dim
 streams (column walk within an open row).
 
+Lengths are *per slot* ([B] int32, scalar-prefetched): each batch row may
+sit at a different depth into the cache (continuous batching), and every
+KV block past that slot's live length is skipped before any compute — the
+paper's §5.1.2 command skipping applied at kernel-block granularity.  The
+caller can additionally prune the grid itself by slicing the cache to a
+host-known bound on the deepest live slot (see ops.decode_attn's s_cap).
+
 Block shapes keep D on the 128-lane axis and the KV block on the sublane
 axis (multiples of 8/16), so HBM reads are sequential full tiles.
 """
@@ -27,8 +34,10 @@ BS = 512    # KV rows per block
 
 def _make_kernel(bs: int, scale: float):
     def kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
+        bi = pl.program_id(0)
         s = pl.program_id(2)
         ns = pl.num_programs(2)
+        ln = len_ref[bi]
 
         @pl.when(s == 0)
         def _():
@@ -39,7 +48,9 @@ def _make_kernel(bs: int, scale: float):
         base = s * bs
         kpos = base + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
 
-        @pl.when(base < len_ref[0])
+        # §5.1.2 command skipping: blocks past *this slot's* length do no
+        # compute at all — the accumulator simply carries through.
+        @pl.when(base < ln)
         def _():
             q = q_ref[0, 0]                  # [G, D]
             k = k_ref[0, :, 0, :]            # [BS, D]
@@ -47,7 +58,7 @@ def _make_kernel(bs: int, scale: float):
             scores = jax.lax.dot_general(
                 q, k, (((1,), (1,)), ((), ())),
                 preferred_element_type=jnp.float32) * scale   # [G, BS]
-            live = kpos < len_ref[0]         # [1, BS]
+            live = kpos < ln                 # [1, BS]
             scores = jnp.where(live, scores, -1e30)
             m_prev = m_ref[...]              # [G, 1]
             m_new = jnp.maximum(m_prev, scores.max(axis=-1, keepdims=True))
@@ -69,9 +80,10 @@ def _make_kernel(bs: int, scale: float):
 
 
 def decode_attn_kernel(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
-                       length: jnp.ndarray, *, bs: int = BS,
+                       lengths: jnp.ndarray, *, bs: int = BS,
                        interpret: bool = True) -> jnp.ndarray:
-    """q: [B, Hkv, G, D]; k/v: [B, S, Hkv, D]; length: [1] int32."""
+    """q: [B, Hkv, G, D]; k/v: [B, S, Hkv, D]; lengths: [B] int32 per-slot
+    live lengths."""
     b, hkv, g, d = q.shape
     s = k.shape[1]
     bs = min(bs, s)
@@ -93,4 +105,4 @@ def decode_attn_kernel(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     return pl.pallas_call(
         _make_kernel(bs, 1.0 / math.sqrt(d)), grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
-        interpret=interpret)(length, q, k, v)
+        interpret=interpret)(lengths, q, k, v)

@@ -1,6 +1,25 @@
-"""Public decode-attention op."""
+"""Public decode-attention op + the runtime routing policy.
+
+``decode_attn`` accepts either one shared length or per-slot lengths
+([B] int32) so a continuous-batching scheduler can keep mixed-depth
+requests in one launch.  ``s_cap`` statically prunes the KV-block grid to
+``cdiv(s_cap, bs)`` — the serving engine passes a host-known bound on the
+deepest live slot between scan segments, so blocks past *every* slot's
+length are never launched (§5.1.2 command skipping at grid granularity);
+per-slot skipping inside the kernel handles the rest.
+
+``DecodeAttnPolicy`` is how the model's attention layer decides, at trace
+time, whether decode attention routes through this kernel and whether the
+kernel runs interpreted.  ``interpret=None`` resolves by backend: off on
+real TPU backends, on everywhere else (this is a Mosaic/TPU kernel — only
+TPU can compile it).  ``mode="auto"`` routes through the kernel on TPU and
+keeps the plain-XLA path elsewhere, where the interpreter's per-program
+overhead would dominate the serving hot loop.
+"""
 from __future__ import annotations
 
+import contextlib
+import dataclasses
 import functools
 
 import jax
@@ -9,16 +28,69 @@ import jax.numpy as jnp
 from .kernel import BS, decode_attn_kernel
 
 
-@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
+@functools.partial(jax.jit, static_argnames=("bs", "interpret", "s_cap"))
 def decode_attn(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                 length: jnp.ndarray | int, *, bs: int = BS,
-                interpret: bool = True) -> jnp.ndarray:
+                interpret: bool = True,
+                s_cap: int | None = None) -> jnp.ndarray:
     """q: [B, Hq, D] one-token queries; k/v: [B, S, Hkv, D] cache;
-    attends over the first ``length`` cache rows."""
+    slot b attends over the first ``length[b]`` cache rows (a scalar
+    length is broadcast to every slot)."""
     b, hq, d = q.shape
     hkv = k.shape[2]
     g = hq // hkv
     qg = q.reshape(b, hkv, g, d)
-    ln = jnp.asarray(length, jnp.int32).reshape(1)
+    if s_cap is not None and s_cap < k.shape[1]:
+        k, v = k[:, :s_cap], v[:, :s_cap]
+    ln = jnp.broadcast_to(jnp.asarray(length, jnp.int32).reshape(-1), (b,))
     out = decode_attn_kernel(qg, k, v, ln, bs=bs, interpret=interpret)
     return out.reshape(b, hq, d)
+
+
+# --------------------------------------------------------------------------
+# routing policy (read by repro.models.attention at trace time)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DecodeAttnPolicy:
+    mode: str = "auto"              # "kernel" | "xla" | "auto"
+    interpret: bool | None = None   # None -> auto (CPU interprets)
+    block_size: int = BS
+    kv_cap: int | None = None       # static bound on live KV depth
+
+    def resolve_interpret(self) -> bool:
+        if self.interpret is not None:
+            return self.interpret
+        return jax.default_backend() != "tpu"
+
+    def kernel_wanted(self) -> bool:
+        if self.mode == "kernel":
+            return True
+        if self.mode == "xla":
+            return False
+        # auto: only TPU compiles this Mosaic kernel; everywhere else the
+        # interpreter would sit in the hot loop, so stay on the XLA path
+        return jax.default_backend() == "tpu"
+
+
+_ACTIVE = DecodeAttnPolicy()
+
+
+def active_policy() -> DecodeAttnPolicy:
+    return _ACTIVE
+
+
+@contextlib.contextmanager
+def decode_attn_policy(**kw):
+    """Override the decode-attention routing policy for code traced inside
+    this context (jit caches must key on anything that varies, e.g. the
+    engine re-jits per kv_cap bucket)."""
+    global _ACTIVE
+    prev = _ACTIVE
+    _ACTIVE = dataclasses.replace(prev, **{k: v for k, v in kw.items()
+                                           if v is not None or k in
+                                           ("interpret", "kv_cap")})
+    try:
+        yield _ACTIVE
+    finally:
+        _ACTIVE = prev

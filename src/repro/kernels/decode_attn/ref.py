@@ -1,18 +1,20 @@
-"""Oracle: one-token GQA attention over a KV cache."""
+"""Oracle: one-token GQA attention over a KV cache (per-slot lengths)."""
 import jax
 import jax.numpy as jnp
 
 
 def decode_attn_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                     length: int | jnp.ndarray) -> jnp.ndarray:
-    """q: [B, Hq, D]; k/v: [B, S, Hkv, D]; attend over k[:, :length]."""
+    """q: [B, Hq, D]; k/v: [B, S, Hkv, D]; slot b attends over
+    k[b, :length[b]] (scalar lengths broadcast)."""
     b, hq, d = q.shape
     s, hkv = k.shape[1], k.shape[2]
     g = hq // hkv
     qg = q.reshape(b, hkv, g, d)
     scores = jnp.einsum("bhgd,bshd->bhgs", qg.astype(jnp.float32),
                         k.astype(jnp.float32)) / jnp.sqrt(d * 1.0)
-    mask = jnp.arange(s)[None, None, None, :] < length
+    ln = jnp.broadcast_to(jnp.asarray(length, jnp.int32).reshape(-1), (b,))
+    mask = jnp.arange(s)[None, None, None, :] < ln[:, None, None, None]
     scores = jnp.where(mask, scores, -1e30)
     w = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhgs,bshd->bhgd", w, v.astype(jnp.float32))

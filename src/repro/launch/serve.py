@@ -1,4 +1,5 @@
-"""Serving driver: batched requests through prefill + greedy decode.
+"""Serving driver: continuous batching through the device-resident decode
+loop (slot table + fused ``lax.scan`` segments, see repro.serve.scheduler).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
       --requests 6 --max-new 8
@@ -14,19 +15,22 @@ import numpy as np
 from ..configs import get_config
 from ..models import param as pm
 from ..models.model_zoo import Model
-from ..serve.engine import Batcher, ServeConfig
+from ..serve.engine import ServeConfig
+from ..serve.scheduler import Batcher
 
 
 def run(arch: str, *, reduced: bool = True, requests: int = 4,
         max_new: int = 8, batch: int = 4, max_len: int = 64,
-        seed: int = 0) -> dict:
+        seed: int = 0, sync_every: int = 8, temperature: float = 0.0,
+        eos_id: int | None = None, attn_mode: str = "auto") -> dict:
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
     model = Model(cfg)
     params = pm.unwrap(model.init(jax.random.key(seed)))
-    scfg = ServeConfig(max_len=max_len, batch=batch)
-    b = Batcher(model, params, scfg)
+    scfg = ServeConfig(max_len=max_len, batch=batch, sync_every=sync_every,
+                       temperature=temperature, attn_mode=attn_mode)
+    b = Batcher(model, params, scfg, eos_id=eos_id, seed=seed)
     rng = np.random.default_rng(seed)
     for rid in range(requests):
         prompt = rng.integers(0, cfg.vocab,
@@ -37,7 +41,7 @@ def run(arch: str, *, reduced: bool = True, requests: int = 4,
     dt = time.perf_counter() - t0
     toks = sum(len(v) for v in results.values())
     print(f"[serve] {len(results)} requests, {toks} tokens in {dt:.1f}s "
-          f"({toks / dt:.1f} tok/s on CPU)")
+          f"({toks / dt:.1f} tok/s on {jax.default_backend()})")
     return {"results": results, "tok_per_s": toks / dt}
 
 
@@ -48,9 +52,17 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--sync-every", type=int, default=8)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--eos-id", type=int, default=None)
+    ap.add_argument("--attn-mode", default="auto",
+                    choices=("auto", "kernel", "xla"))
     args = ap.parse_args()
     run(args.arch, reduced=args.reduced, requests=args.requests,
-        max_new=args.max_new, batch=args.batch)
+        max_new=args.max_new, batch=args.batch, max_len=args.max_len,
+        sync_every=args.sync_every, temperature=args.temperature,
+        eos_id=args.eos_id, attn_mode=args.attn_mode)
 
 
 if __name__ == "__main__":

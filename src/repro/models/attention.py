@@ -41,19 +41,34 @@ class KVCache(NamedTuple):
 # --------------------------------------------------------------------------
 
 def _dense_attn(q, k, v, *, causal: bool, q_offset, kv_len=None):
-    """q: [B,Lq,Hkv,G,D], k/v: [B,Lk,Hkv,D]."""
+    """q: [B,Lq,Hkv,G,D], k/v: [B,Lk,Hkv,D].  ``q_offset``/``kv_len`` may
+    be per-slot vectors ([B] int32) for continuous-batching decode, where
+    each batch row sits at its own depth into the cache."""
     b, lq, hkv, g, d = q.shape
     lk = k.shape[1]
     scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, k) / math.sqrt(d)
     scores = scores.astype(jnp.float32)
-    qpos = jnp.arange(lq)[:, None] + q_offset
-    kpos = jnp.arange(lk)[None, :]
-    mask = jnp.ones((lq, lk), dtype=bool)
-    if causal:
-        mask &= kpos <= qpos
-    if kv_len is not None:
-        mask &= kpos < kv_len
-    scores = jnp.where(mask, scores, -1e30)
+    kpos = jnp.arange(lk)
+    off = jnp.asarray(q_offset)
+    vec = off.ndim == 1 or (kv_len is not None and jnp.ndim(kv_len) == 1)
+    if vec:
+        off_b = off if off.ndim == 1 else jnp.broadcast_to(off, (b,))
+        qpos = off_b[:, None, None] + jnp.arange(lq)[:, None]   # [B,Lq,1]
+        mask = jnp.ones((b, lq, lk), dtype=bool)
+        if causal:
+            mask &= kpos[None, None, :] <= qpos
+        if kv_len is not None:
+            kvl = jnp.broadcast_to(jnp.asarray(kv_len), (b,))
+            mask &= kpos[None, None, :] < kvl[:, None, None]
+        scores = jnp.where(mask[:, None, None], scores, -1e30)
+    else:
+        qpos = jnp.arange(lq)[:, None] + off
+        mask = jnp.ones((lq, lk), dtype=bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos
+        if kv_len is not None:
+            mask &= kpos[None, :] < kv_len
+        scores = jnp.where(mask, scores, -1e30)
     w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     return jnp.einsum("bhgqk,bkhd->bqhgd", w, v)
 
@@ -109,6 +124,37 @@ def _blockwise_attn(q, k, v, *, causal: bool, q_offset):
     _, ob = jax.lax.scan(q_step, None, (jnp.arange(nq), qb))
     out = ob.transpose(1, 0, 4, 2, 3, 5).reshape(b, nq * bq, hkv, g, dv)
     return out[:, :lq]
+
+
+def _cache_insert(buf: jnp.ndarray, vals: jnp.ndarray, length) -> jnp.ndarray:
+    """Write ``vals`` [B, L, ...] into ``buf`` [B, S, ...] starting at
+    ``length`` per row.  Scalar lengths use a dynamic slice (one shared
+    offset); vector lengths ([B]) scatter per slot — the continuous-batching
+    case where each slot is at its own depth.  Out-of-range rows drop."""
+    vals = vals.astype(buf.dtype)
+    ln = jnp.asarray(length)
+    if ln.ndim == 0:
+        return jax.lax.dynamic_update_slice_in_dim(buf, vals, ln, axis=1)
+    b, l = vals.shape[:2]
+    bidx = jnp.arange(b)[:, None]
+    pos = ln[:, None] + jnp.arange(l)[None, :]
+    return buf.at[bidx, pos].set(vals, mode="drop")
+
+
+def _decode_kernel_route(q, kc, vc, kv_len, dtype):
+    """Route one-token GQA decode attention through the Pallas kernel when
+    the active policy asks for it.  q: [B,1,Hq,D] -> [B,1,Hq,D].  The
+    caller has already applied the policy's kv_cap slice to kc/vc."""
+    from ..kernels.decode_attn import decode_attn
+    pol = _decode_policy()
+    out = decode_attn(q[:, 0], kc.astype(dtype), vc.astype(dtype), kv_len,
+                      bs=pol.block_size, interpret=pol.resolve_interpret())
+    return out[:, None]
+
+
+def _decode_policy():
+    from ..kernels.decode_attn import active_policy
+    return active_policy()
 
 
 def attention_core(q, k, v, *, causal: bool, q_offset=0, kv_len=None):
@@ -169,16 +215,24 @@ def gqa_apply(params: dict, x: jnp.ndarray, cfg: ArchConfig, *,
         k, v = kv_override
     new_cache = None
     if cache is not None and kv_override is None:
-        kc = jax.lax.dynamic_update_slice_in_dim(
-            cache.k, k.astype(cache.k.dtype), cache.length, axis=1)
-        vc = jax.lax.dynamic_update_slice_in_dim(
-            cache.v, v.astype(cache.v.dtype), cache.length, axis=1)
-        new_cache = KVCache(kc, vc, cache.length + x.shape[1])
-        k, v = kc.astype(x.dtype), vc.astype(x.dtype)
-        # causal w.r.t. absolute positions (needed for multi-token prefill;
-        # no-op for single-token decode where the query is the last position)
-        out = attention_core(q, k, v, causal=True, q_offset=cache.length,
-                             kv_len=cache.length + x.shape[1])
+        kc = _cache_insert(cache.k, k, cache.length)
+        vc = _cache_insert(cache.v, v, cache.length)
+        kv_len = cache.length + x.shape[1]
+        new_cache = KVCache(kc, vc, kv_len)
+        pol = _decode_policy()
+        if pol.kv_cap is not None and pol.kv_cap < kc.shape[1]:
+            # grid pruning: the engine bounds the deepest live slot between
+            # scan segments, so dead KV blocks never enter the attention op
+            kc, vc = kc[:, :pol.kv_cap], vc[:, :pol.kv_cap]
+        if x.shape[1] == 1 and not ctx_shard and pol.kernel_wanted():
+            out = _decode_kernel_route(q, kc, vc, kv_len, x.dtype)
+        else:
+            # causal w.r.t. absolute positions (needed for multi-token
+            # prefill; no-op for single-token decode where the query is the
+            # last position)
+            out = attention_core(q, kc.astype(x.dtype), vc.astype(x.dtype),
+                                 causal=True, q_offset=cache.length,
+                                 kv_len=kv_len)
     else:
         if ctx_shard:
             q = constrain(q, ("batch", "ctx", None, None))
@@ -245,11 +299,12 @@ def mla_apply(params: dict, x: jnp.ndarray, cfg: ArchConfig, *,
                        params["uk"]["w"].astype(x.dtype))
     new_cache = None
     if cache is not None:
-        ckv_c = jax.lax.dynamic_update_slice_in_dim(
-            cache.k, c_kv.astype(cache.k.dtype), cache.length, axis=1)
-        kr_c = jax.lax.dynamic_update_slice_in_dim(
-            cache.v, k_rope.astype(cache.v.dtype), cache.length, axis=1)
+        ckv_c = _cache_insert(cache.k, c_kv, cache.length)
+        kr_c = _cache_insert(cache.v, k_rope, cache.length)
         new_cache = KVCache(ckv_c, kr_c, cache.length + x.shape[1])
+        pol = _decode_policy()
+        if pol.kv_cap is not None and pol.kv_cap < ckv_c.shape[1]:
+            ckv_c, kr_c = ckv_c[:, :pol.kv_cap], kr_c[:, :pol.kv_cap]
         c_kv_all, k_rope_all = ckv_c.astype(x.dtype), kr_c.astype(x.dtype)
         kv_len = cache.length + x.shape[1]
         q_offset = cache.length

@@ -52,14 +52,27 @@ class Model:
         return lm_loss(params, batch, self.cfg, dtype=dtype, remat=remat)
 
     # ----------------------------- inference -----------------------------
-    def prefill(self, params, batch, max_len: int, *, dtype=jnp.bfloat16):
-        """Run the prompt, fill caches sized for ``max_len`` tokens."""
+    def prefill(self, params, batch, max_len: int, *, dtype=jnp.bfloat16,
+                last_pos=None):
+        """Run the prompt, fill caches sized for ``max_len`` tokens.
+
+        ``last_pos`` ([B] int32, optional) gathers each row's logits at its
+        own final *prompt* position instead of the padded width — the
+        slot-scheduler path, where prompts of mixed length share one padded
+        prefill and padding keys are masked out (and later overwritten) by
+        per-slot cache lengths during decode."""
         caches = init_caches(self.cfg, batch["tokens"].shape[0], max_len,
                              dtype)
         hidden, caches, _ = forward(params, batch, self.cfg, caches=caches,
                                     cache_len=jnp.zeros((), jnp.int32),
                                     dtype=dtype)
-        logits = logits_fn(params, hidden[:, -1:], self.cfg)
+        if last_pos is None:
+            h = hidden[:, -1:]
+        else:
+            lp = jnp.clip(jnp.asarray(last_pos, jnp.int32), 0,
+                          hidden.shape[1] - 1)
+            h = hidden[jnp.arange(hidden.shape[0]), lp][:, None]
+        logits = logits_fn(params, h, self.cfg)
         return logits, caches
 
     def decode_step(self, params, tokens, caches, cache_len, *,

@@ -250,7 +250,11 @@ def forward(params: dict, batch: dict, cfg: ArchConfig, *,
 
     length = x.shape[1]
     offset = cache_len if cache_len is not None else 0
-    positions = offset + jnp.arange(length)
+    # per-slot cache depths (continuous batching): positions become [B, L]
+    if getattr(offset, "ndim", 0) == 1:
+        positions = offset[:, None] + jnp.arange(length)[None, :]
+    else:
+        positions = offset + jnp.arange(length)
 
     new_caches = []
     aux_total = jnp.zeros((), jnp.float32)

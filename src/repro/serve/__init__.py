@@ -1,1 +1,4 @@
-"""Serving: prefill/decode step factories + request batcher."""
+"""Serving: jitted prefill/decode-loop engine + slot-based continuous
+batching scheduler."""
+from .engine import ServeConfig, jit_decode_loop, jit_decode_step  # noqa: F401
+from .scheduler import Batcher, ContinuousBatcher  # noqa: F401

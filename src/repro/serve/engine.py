@@ -1,10 +1,20 @@
-"""Serving engine: jitted prefill + decode steps and a batched scheduler.
+"""Serving engine: jitted prefill/decode steps and the device-resident
+multi-token decode loop.
 
 ``decode_step`` is the paper's regime: one token against a deep KV cache is
 a skinny, memory-bandwidth-bound op (op/byte ~= 1-2) — exactly what the
 PIM-amenability test flags, and what the decode_attn Pallas kernel and the
-roofline's memory term are about.  Caches are donated so decode runs
+roofline's memory term are about.  The §5 co-design lesson is that
+orchestration, not kernel peak, decides delivered speed: a per-token Python
+loop spends its time in host dispatch and host argmax, so ``decode_loop``
+keeps everything — tokens, caches, per-slot lengths, done flags, sampling —
+on device inside one jitted ``lax.scan`` and only syncs to host every
+``sync_every`` steps.  Caches are donated throughout, so decode runs
 in-place.
+
+The slot-based continuous-batching scheduler that drives this loop lives in
+:mod:`repro.serve.scheduler`; ``Batcher`` (the public entry point) is
+re-exported from there.
 """
 from __future__ import annotations
 
@@ -16,7 +26,10 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 
 from ..distributed import sharding as shd
+from ..kernels.decode_attn import decode_attn_policy
 from ..models.model_zoo import Model
+
+PAD_TOKEN = -1    # emitted-slot sentinel: "slot was already retired"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -25,7 +38,24 @@ class ServeConfig:
     batch: int
     dtype: Any = jnp.bfloat16
     temperature: float = 0.0     # 0 = greedy
+    sync_every: int = 8          # decode steps per host sync (scan length)
+    attn_mode: str = "auto"      # decode attention: "kernel"|"xla"|"auto"
+    attn_interpret: bool | None = None   # None -> off on TPU, on elsewhere
 
+
+def sample_tokens(logits: jnp.ndarray, key: jax.Array,
+                  temperature: float) -> jnp.ndarray:
+    """logits [B, V] -> token ids [B] (on device; greedy when T == 0)."""
+    logits = logits.astype(jnp.float32)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        key, logits / temperature, axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# single-step factories (kept for the dry-run / sharding paths)
+# ---------------------------------------------------------------------------
 
 def make_decode_step(model: Model, cfg: ServeConfig):
     def step(params, tokens, caches, cache_len, extra):
@@ -58,46 +88,102 @@ def make_prefill(model: Model, cfg: ServeConfig):
     return prefill
 
 
-class Batcher:
-    """Greedy continuous batcher over a fixed decode batch (host-side).
+# ---------------------------------------------------------------------------
+# device-resident decode loop
+# ---------------------------------------------------------------------------
 
-    Requests are (id, prompt tokens); finished slots (EOS or length) are
-    refilled from the queue.  This is the host-side loop a serving pod
-    runs; the device work is the jitted prefill/decode steps above.
+def make_decode_loop(model: Model, cfg: ServeConfig, *, steps: int,
+                     eos_id: int | None, kv_cap: int | None = None):
+    """Build the fused multi-token decode driver.
+
+    Returns ``loop(params, tok, caches, lengths, done, remaining, key) ->
+    ((tok, caches, lengths, done, remaining, key), emitted)`` where
+    ``emitted`` is [steps, B] int32 with PAD_TOKEN in retired slots.  All
+    state stays on device across the scan; per-slot ``lengths`` drive the
+    cache writes, RoPE positions and attention masks, ``done`` freezes
+    retired slots (EOS or budget), and sampling happens on device.
     """
+    temp = cfg.temperature
 
-    def __init__(self, model: Model, params, cfg: ServeConfig,
-                 eos_id: int = 0):
-        self.model, self.params, self.cfg = model, params, cfg
-        self.eos = eos_id
-        self.queue: list[tuple[int, list[int]]] = []
-        self.results: dict[int, list[int]] = {}
+    def loop(params, tok, caches, lengths, done, remaining, key):
+        def body(carry, _):
+            tok, caches, lengths, done, remaining, key = carry
+            with decode_attn_policy(mode=cfg.attn_mode,
+                                    interpret=cfg.attn_interpret,
+                                    kv_cap=kv_cap):
+                logits, caches = model.decode_step(
+                    params, tok, caches, lengths, dtype=cfg.dtype)
+            key, sub = jax.random.split(key)
+            nxt = sample_tokens(logits[:, -1], sub, temp)
+            emit = jnp.where(done, PAD_TOKEN, nxt)
+            if eos_id is None:
+                is_eos = jnp.zeros_like(done)
+            else:
+                is_eos = nxt == eos_id
+            remaining = remaining - jnp.where(done, 0, 1)
+            lengths = lengths + jnp.where(done, 0, 1)
+            new_done = (done | is_eos | (remaining <= 0)
+                        | (lengths >= cfg.max_len))
+            tok = jnp.where(done[:, None], tok, nxt[:, None])
+            return (tok, caches, lengths, new_done, remaining, key), emit
 
-    def submit(self, rid: int, prompt: list[int]) -> None:
-        self.queue.append((rid, prompt))
+        carry = (tok, caches, lengths, done, remaining, key)
+        carry, emitted = jax.lax.scan(body, carry, None, length=steps)
+        return carry, emitted
+    return loop
 
-    def run(self, max_new: int = 16) -> dict[int, list[int]]:
-        cfg = self.cfg
-        while self.queue:
-            batch = [self.queue.pop(0)
-                     for _ in range(min(cfg.batch, len(self.queue)))]
-            width = max(len(p) for _, p in batch)
-            toks = jnp.zeros((cfg.batch, width), jnp.int32)
-            for i, (_, p) in enumerate(batch):
-                toks = toks.at[i, :len(p)].set(jnp.asarray(p, jnp.int32))
-            logits, caches = self.model.prefill(
-                self.params, {"tokens": toks}, cfg.max_len, dtype=cfg.dtype)
-            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-            outs = [[] for _ in batch]
-            length = jnp.asarray(width, jnp.int32)
-            for _ in range(max_new):
-                for i in range(len(batch)):
-                    outs[i].append(int(tok[i, 0]))
-                logits, caches = self.model.decode_step(
-                    self.params, tok, caches, length, dtype=cfg.dtype)
-                tok = jnp.argmax(logits[:, -1], axis=-1).astype(
-                    jnp.int32)[:, None]
-                length = length + 1
-            for (rid, _), out in zip(batch, outs):
-                self.results[rid] = out
-        return self.results
+
+def jit_decode_loop(model: Model, cfg: ServeConfig, *, steps: int,
+                    eos_id: int | None, kv_cap: int | None = None):
+    """Jitted decode segment: the caches argument is donated so the KV
+    cache is updated in place across the whole scan (the small carry
+    arrays — tokens, lengths, flags, key — are copied)."""
+    loop = make_decode_loop(model, cfg, steps=steps, eos_id=eos_id,
+                            kv_cap=kv_cap)
+    return jax.jit(loop, donate_argnums=(2,))
+
+
+def make_join(model: Model, cfg: ServeConfig, *, eos_id: int | None):
+    """Build the slot-refill step: batch-prefill the joining prompts (padded
+    to one width) and select them into the live slot state.
+
+    ``join_mask`` [B] picks the slots being (re)filled; rows outside the
+    mask keep their caches, token, length and flags bit-for-bit (the
+    prefill computes for every row, but ``jnp.where`` on the batch axis
+    discards the non-joining rows).  Returns the refreshed state plus each
+    row's first sampled token.
+    """
+    temp = cfg.temperature
+
+    def join(params, caches, tok, lengths, done, remaining,
+             join_mask, prompts, plens, budgets, key):
+        with decode_attn_policy(mode=cfg.attn_mode,
+                                interpret=cfg.attn_interpret):
+            logits, new_caches = model.prefill(
+                params, {"tokens": prompts}, cfg.max_len, dtype=cfg.dtype,
+                last_pos=plens - 1)
+        key, sub = jax.random.split(key)
+        first = sample_tokens(logits[:, -1], sub, temp)
+        if eos_id is None:
+            is_eos = jnp.zeros_like(join_mask)
+        else:
+            is_eos = first == eos_id
+        rem_new = budgets - 1
+        tok = jnp.where(join_mask[:, None], first[:, None], tok)
+        lengths = jnp.where(join_mask, plens, lengths)
+        remaining = jnp.where(join_mask, rem_new, remaining)
+        done = jnp.where(join_mask, is_eos | (rem_new <= 0), done)
+
+        def select(new, old):
+            m = join_mask.reshape((1, join_mask.shape[0])
+                                  + (1,) * (new.ndim - 2))
+            return jnp.where(m, new.astype(old.dtype), old)
+
+        caches = jax.tree_util.tree_map(select, new_caches, caches)
+        return caches, tok, lengths, done, remaining, key, first
+    return join
+
+
+def jit_join(model: Model, cfg: ServeConfig, *, eos_id: int | None):
+    join = make_join(model, cfg, eos_id=eos_id)
+    return jax.jit(join, donate_argnums=(1, 2, 3, 4, 5))

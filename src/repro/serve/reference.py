@@ -1,0 +1,71 @@
+"""Step-by-step reference decode loop: the oracle for the fused scan.
+
+Runs every request in one padded batch, one ``model.decode_step`` per
+token, host-side sampling — the semantics the device-resident scan in
+:mod:`repro.serve.engine` must reproduce token-for-token (greedy).  Kept
+deliberately simple and schedule-free: per-slot lengths make each row's
+output independent of the other rows, so the continuous batcher's refills
+must not change any request's tokens.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .engine import ServeConfig, sample_tokens
+from ..models.model_zoo import Model
+
+
+def reference_decode(model: Model, params, cfg: ServeConfig,
+                     requests: list[tuple[int, list[int]]], max_new: int,
+                     eos_id: int | None = None,
+                     seed: int = 0) -> dict[int, list[int]]:
+    """Decode ``requests`` [(rid, prompt)] as one batch, step by step.
+
+    Same per-slot semantics as the engine: padded batch prefill with
+    per-row last-prompt-position logits, per-slot cache lengths during
+    decode, EOS kept then the slot frozen.  Sampling matches
+    ``engine.sample_tokens`` with a per-step split of one key (greedy when
+    ``cfg.temperature == 0``, where the key is unused).
+    """
+    b = len(requests)
+    width = max(len(p) for _, p in requests)
+    toks = np.zeros((b, width), np.int32)
+    plens = np.zeros((b,), np.int32)
+    for i, (_, p) in enumerate(requests):
+        toks[i, :len(p)] = p
+        plens[i] = len(p)
+    logits, caches = model.prefill(
+        params, {"tokens": jnp.asarray(toks)}, cfg.max_len, dtype=cfg.dtype,
+        last_pos=jnp.asarray(plens - 1))
+    key = jax.random.key(seed)
+    key, sub = jax.random.split(key)
+    tok = sample_tokens(logits[:, -1], sub, cfg.temperature)[:, None]
+    lengths = jnp.asarray(plens)
+    outs = [[int(tok[i, 0])] for i in range(b)]
+    done = [eos_id is not None and outs[i][0] == eos_id or max_new <= 1
+            for i in range(b)]
+    for _ in range(max_new - 1):
+        logits, caches = model.decode_step(params, tok, caches, lengths,
+                                           dtype=cfg.dtype)
+        key, sub = jax.random.split(key)
+        nxt = sample_tokens(logits[:, -1], sub, cfg.temperature)
+        nxt_np = np.asarray(nxt)
+        new_tok = np.asarray(tok).copy()
+        adv = np.zeros((b,), np.int32)
+        for i in range(b):
+            if done[i]:
+                continue
+            v = int(nxt_np[i])
+            outs[i].append(v)
+            new_tok[i, 0] = v
+            adv[i] = 1
+            if ((eos_id is not None and v == eos_id)
+                    or len(outs[i]) >= max_new):
+                done[i] = True
+        tok = jnp.asarray(new_tok)
+        lengths = lengths + jnp.asarray(adv)
+        if all(done):
+            break
+    return {rid: outs[i] for i, (rid, _) in enumerate(requests)}

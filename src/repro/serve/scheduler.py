@@ -1,0 +1,205 @@
+"""Slot-based continuous batching over the device-resident decode loop.
+
+Serving architecture
+--------------------
+The scheduler owns a fixed-width **slot table**: ``cfg.batch`` decode slots
+that share one KV-cache allocation ([layers, B, max_len, ...]), one jitted
+prefill/join step and one jitted multi-token decode scan.  Host state per
+slot is just (request id, token budget, live length); device state is
+(next-token [B,1], per-slot cache_len [B], done flag [B], remaining budget
+[B], PRNG key, caches).
+
+Refill policy: requests queue in a ``deque``.  Between decode *segments*
+(``cfg.sync_every`` fused steps — the only host sync points), every retired
+slot is refilled from the queue head: the joining prompts are padded to one
+width, batch-prefilled in a single jitted call, and selected into the live
+state with a batch-axis ``where`` — occupied slots keep their caches
+bit-for-bit.  Mixed-length requests therefore share one jitted decode step
+at all times instead of padding to a fresh batch each round, and the same
+two compiled executables are reused across the whole drain (no retracing).
+
+Retirement: a slot retires when it emits EOS (the EOS token is kept) or
+exhausts its ``max_new`` budget.  Both conditions are evaluated *on device*
+inside the scan (done-flag latch), so a retired slot stops sampling,
+stops growing its cache and emits a PAD sentinel until the segment ends;
+the host mirrors the same rules when it drains the emitted block.
+
+Dead-block skipping (paper §5.1.2): commercial PIM kernels win by skipping
+commands for banks whose data is dead; the serving analogue is KV blocks
+past a slot's live length.  Two levels: (1) per-slot lengths reach the
+decode-attention kernel, which skips every KV block past *that slot's*
+depth before any compute; (2) between segments the host knows the deepest
+live slot, so the engine re-jits the scan with a power-of-two ``kv_cap``
+and the attention op slices the cache to that bound — blocks past *every*
+slot's length are never launched at all.
+"""
+from __future__ import annotations
+
+import collections
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .engine import PAD_TOKEN, ServeConfig, jit_decode_loop, jit_join
+from ..models.model_zoo import Model
+
+
+def _pow2_bucket(n: int, lo: int = 16, hi: int | None = None) -> int:
+    b = max(lo, 1 << max(0, n - 1).bit_length())
+    return min(b, hi) if hi is not None else b
+
+
+class ContinuousBatcher:
+    """Greedy continuous batcher over a fixed slot table (see module doc).
+
+    Drop-in upgrade of the seed per-token ``Batcher``: same
+    ``submit``/``run`` surface, but the hot path is a jitted ``lax.scan``
+    with donated caches, device-side sampling and per-slot lengths instead
+    of a per-token Python loop with host argmax.
+    """
+
+    def __init__(self, model: Model, params, cfg: ServeConfig,
+                 eos_id: int | None = None, seed: int = 0):
+        self.model, self.params, self.cfg = model, params, cfg
+        self.eos = eos_id
+        self.queue: collections.deque[tuple[int, list[int]]] = \
+            collections.deque()
+        self.results: dict[int, list[int]] = {}
+        b = cfg.batch
+        self.caches = model.init_caches(b, cfg.max_len, cfg.dtype)
+        self.tok = jnp.zeros((b, 1), jnp.int32)
+        self.lengths = jnp.zeros((b,), jnp.int32)
+        self.done = jnp.ones((b,), bool)
+        self.remaining = jnp.zeros((b,), jnp.int32)
+        self.key = jax.random.key(seed)
+        # host mirror of the slot table
+        self.slot_rid: list[int | None] = [None] * b
+        self.slot_len = [0] * b
+        self.slot_budget = [0] * b
+        self.outputs: dict[int, list[int]] = {}
+        self._join = jit_join(model, cfg, eos_id=eos_id)
+        self._loops: dict[tuple[int, int | None], object] = {}
+
+    # ------------------------------------------------------------------
+    def submit(self, rid: int, prompt: list[int]) -> None:
+        if not prompt:
+            raise ValueError("empty prompt")
+        self.queue.append((rid, list(prompt)))
+
+    # ------------------------------------------------------------------
+    def _loop(self, steps: int, kv_cap: int | None):
+        keyid = (steps, kv_cap)
+        if keyid not in self._loops:
+            self._loops[keyid] = jit_decode_loop(
+                self.model, self.cfg, steps=steps, eos_id=self.eos,
+                kv_cap=kv_cap)
+        return self._loops[keyid]
+
+    def _kv_cap(self, steps: int) -> int | None:
+        live = [self.slot_len[i] for i, r in enumerate(self.slot_rid)
+                if r is not None]
+        if not live:
+            return None
+        cap = _pow2_bucket(max(live) + steps, hi=self.cfg.max_len)
+        return None if cap >= self.cfg.max_len else cap
+
+    # ------------------------------------------------------------------
+    def _refill(self, max_new: int) -> None:
+        free = [i for i, r in enumerate(self.slot_rid) if r is None]
+        if not free or not self.queue:
+            return
+        take: list[tuple[int, int, list[int]]] = []   # (slot, rid, prompt)
+        for slot in free:
+            if not self.queue:
+                break
+            take.append((slot, *self.queue.popleft()))
+        if not take:
+            return
+        b = self.cfg.batch
+        width = _pow2_bucket(max(len(p) for _, _, p in take), lo=8,
+                             hi=self.cfg.max_len)
+        join_mask = np.zeros((b,), bool)
+        prompts = np.zeros((b, width), np.int32)
+        plens = np.ones((b,), np.int32)
+        for slot, _, p in take:
+            join_mask[slot] = True
+            prompts[slot, :len(p)] = p
+            plens[slot] = len(p)
+        (self.caches, self.tok, self.lengths, self.done, self.remaining,
+         self.key, first) = self._join(
+            self.params, self.caches, self.tok, self.lengths, self.done,
+            self.remaining, jnp.asarray(join_mask), jnp.asarray(prompts),
+            jnp.asarray(plens),
+            jnp.full((b,), max_new, jnp.int32), self.key)
+        first = np.asarray(first)
+        for slot, rid, p in take:
+            out = [int(first[slot])]
+            self.outputs[rid] = out
+            self.slot_len[slot] = len(p)
+            if (self.eos is not None and out[0] == self.eos) or max_new <= 1:
+                self.results[rid] = out           # retired at birth
+                self.slot_rid[slot] = None
+            else:
+                self.slot_rid[slot] = rid
+                self.slot_budget[slot] = max_new
+
+    # ------------------------------------------------------------------
+    def _collect(self, emitted: np.ndarray) -> None:
+        steps = emitted.shape[0]
+        for i, rid in enumerate(self.slot_rid):
+            if rid is None:
+                continue
+            out = self.outputs[rid]
+            appended = 0
+            for t in range(steps):
+                v = int(emitted[t, i])
+                if v == PAD_TOKEN:
+                    break
+                out.append(v)
+                appended += 1
+                self.slot_len[i] += 1
+                if ((self.eos is not None and v == self.eos)
+                        or len(out) >= self.slot_budget[i]):
+                    self.results[rid] = out
+                    self.slot_rid[i] = None
+                    break
+            if appended == 0 and self.slot_rid[i] is not None:
+                raise RuntimeError(
+                    f"slot {i} (request {rid}) stalled: device reports done "
+                    "but host bookkeeping thinks it is live")
+
+    # ------------------------------------------------------------------
+    def run(self, max_new: int = 16) -> dict[int, list[int]]:
+        """Drain the queue: refill slots, run fused decode segments, sync
+        emitted tokens every ``cfg.sync_every`` steps."""
+        if max_new <= 0:
+            while self.queue:
+                rid, _ = self.queue.popleft()
+                self.results[rid] = []
+            return self.results
+        steps = max(1, self.cfg.sync_every)
+        # reject oversized requests up front, before anything is dequeued,
+        # so a bad request never drops its queue-mates
+        for rid, prompt in self.queue:
+            if len(prompt) + max_new > self.cfg.max_len:
+                raise ValueError(
+                    f"request {rid}: prompt {len(prompt)} + max_new "
+                    f"{max_new} exceeds max_len {self.cfg.max_len}")
+        while self.queue or any(r is not None for r in self.slot_rid):
+            self._refill(max_new)
+            if all(r is None for r in self.slot_rid):
+                if self.queue:
+                    continue
+                break
+            loop = self._loop(steps, self._kv_cap(steps))
+            ((self.tok, self.caches, self.lengths, self.done,
+              self.remaining, self.key), emitted) = loop(
+                self.params, self.tok, self.caches, self.lengths,
+                self.done, self.remaining, self.key)
+            self._collect(np.asarray(emitted))
+        return self.results
+
+
+# the public serving entry point: the slot scheduler *is* the batcher
+Batcher = ContinuousBatcher

@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")   # optional dep: skip, don't break tier-1
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.cache_model import LruCache
 from repro.core.commands import Kind, Loop, Seg, Subset, total_commands
