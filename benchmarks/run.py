@@ -45,8 +45,8 @@ def main() -> None:
 
         try:
             from . import serve_bench
-            t = Table("Serving — per-token host loop vs device-resident "
-                      "engine")
+            t = Table("Serving — per-token loop vs device engine vs "
+                      "paged KV pool")
             serve_bench.run(t)
             t.emit()
         except Exception as exc:

@@ -1,15 +1,25 @@
-"""Serving throughput: seed per-token host loop vs device-resident engine.
+"""Serving throughput + KV memory accounting: seed per-token host loop vs
+device-resident engine, dense vs paged KV cache.
 
 The seed ``Batcher`` ran decode as a per-token Python loop — eager
 dispatch, host argmax, a fresh padded batch per round, O(n^2) queue drain.
 The engine replaces that with slot-based continuous batching over a jitted
-``lax.scan`` (repro.serve.scheduler).  This benchmark times both on the
-same request set and reports tokens/sec:
+``lax.scan`` (repro.serve.scheduler); the paged mode additionally replaces
+the per-slot ``max_len`` KV stripes with a block pool (repro.serve.kvpool)
+so admission is on free pages and retired slots return memory.  Every row
+therefore reports KV utilization (live tokens / allocated token capacity)
+next to tokens/sec — the dense layout's stranded-stripe waste is the
+number the paged pool exists to fix.
 
-  PYTHONPATH=src python benchmarks/serve_bench.py [--smoke] [--arch A]
+  PYTHONPATH=src python benchmarks/serve_bench.py [--smoke] [--paged]
+                                                  [--arch A]
 
 ``--smoke`` is the CI sanity mode (~5 s): engine only, asserts a nonzero
-throughput.  The full mode asserts the engine beats the seed loop >= 3x.
+throughput (with ``--paged``: the paged engine, plus 100% page
+reclamation).  The full mode asserts the engine beats the seed loop >= 3x
+and that at equal KV memory the paged pool either admits more concurrent
+requests than dense or matches dense throughput within 10% while
+reclaiming every retired slot's pages.
 """
 from __future__ import annotations
 
@@ -67,19 +77,24 @@ def seed_batcher_run(model, params, cfg: ServeConfig, requests, max_new):
 
 
 def engine_run(model, params, cfg: ServeConfig, requests, max_new):
+    """Returns (results, batcher) — the batcher carries the KV-utilization
+    samples and, in paged mode, the page pool."""
     b = Batcher(model, params, cfg)
     for rid, p in requests:
         b.submit(rid, p)
-    return b.run(max_new=max_new)
+    return b.run(max_new=max_new), b
 
 
 def bench(arch: str = "qwen2-0.5b", *, batch: int = 4, requests: int = 12,
           max_new: int = 24, max_len: int = 96, sync_every: int = 8,
-          smoke: bool = False, seed: int = 0) -> dict:
+          smoke: bool = False, paged: bool = False, page_size: int = 16,
+          total_pages: int | None = None, seed: int = 0) -> dict:
     cfg = get_config(arch).reduced()
     model = Model(cfg)
     params = pm.unwrap(model.init(jax.random.key(seed)))
-    scfg = ServeConfig(max_len=max_len, batch=batch, sync_every=sync_every)
+    scfg = ServeConfig(max_len=max_len, batch=batch, sync_every=sync_every,
+                       paged=paged, page_size=page_size,
+                       total_pages=total_pages)
     reqs = make_requests(cfg.vocab, requests, seed)
 
     # engine: one warmup drain compiles the join/segment executables; the
@@ -88,11 +103,18 @@ def bench(arch: str = "qwen2-0.5b", *, batch: int = 4, requests: int = 12,
     if not smoke:
         engine_run(model, params, scfg, reqs, max_new)
     t0 = time.perf_counter()
-    got = engine_run(model, params, scfg, reqs, max_new)
+    got, batcher = engine_run(model, params, scfg, reqs, max_new)
     dt_engine = time.perf_counter() - t0
     toks = sum(len(v) for v in got.values())
-    out = {"arch": arch, "tokens": toks,
-           "engine_tok_s": toks / dt_engine, "engine_s": dt_engine}
+    util = batcher.kv_utilization()
+    out = {"arch": arch, "tokens": toks, "paged": paged,
+           "engine_tok_s": toks / dt_engine, "engine_s": dt_engine,
+           "kv_util_mean": util["mean_util"],
+           "kv_util_peak": util["peak_util"],
+           "peak_live_slots": util["peak_live_slots"]}
+    if paged:
+        out["pages_reclaimed"] = (batcher.pool.free_pages
+                                  == batcher.pool.n_pages)
 
     if not smoke:
         t0 = time.perf_counter()
@@ -104,13 +126,58 @@ def bench(arch: str = "qwen2-0.5b", *, batch: int = 4, requests: int = 12,
     return out
 
 
+def capacity_compare(arch: str = "qwen2-0.5b", *, requests: int = 16,
+                     max_new: int = 24, max_len: int = 96,
+                     page_size: int = 16, seed: int = 0) -> dict:
+    """Equal-KV-memory comparison: the dense slot table spends
+    ``batch * max_len`` tokens of capacity on 4 slots; the paged pool
+    spends the same tokens on pages and admits into 8 slots, so short
+    requests run 2x as concurrently.  Returns both engines' peak live
+    slots, throughput and utilization."""
+    cfg = get_config(arch).reduced()
+    model = Model(cfg)
+    params = pm.unwrap(model.init(jax.random.key(seed)))
+    reqs = make_requests(cfg.vocab, requests, seed)
+    dense_batch = 4
+    kv_tokens = dense_batch * max_len                 # equal KV memory
+    dense_cfg = ServeConfig(max_len=max_len, batch=dense_batch)
+    paged_cfg = ServeConfig(max_len=max_len, batch=2 * dense_batch,
+                            paged=True, page_size=page_size,
+                            total_pages=kv_tokens // page_size)
+
+    res = {}
+    for name, scfg in (("dense", dense_cfg), ("paged", paged_cfg)):
+        engine_run(model, params, scfg, reqs, max_new)      # warmup
+        t0 = time.perf_counter()
+        got, b = engine_run(model, params, scfg, reqs, max_new)
+        dt = time.perf_counter() - t0
+        toks = sum(len(v) for v in got.values())
+        util = b.kv_utilization()
+        res[name] = {"tok_s": toks / dt, "s": dt,
+                     "kv_util_mean": util["mean_util"],
+                     "peak_live_slots": util["peak_live_slots"]}
+        if name == "paged":
+            res[name]["pages_reclaimed"] = (b.pool.free_pages
+                                            == b.pool.n_pages)
+    return res
+
+
 def run(table) -> None:
-    """Hook for benchmarks.run: one engine-vs-seed row at smoke scale."""
+    """Hook for benchmarks.run: engine-vs-seed plus dense-vs-paged rows."""
     r = bench(requests=8, max_new=16, batch=4)
     table.add("serve seed per-token loop", r["seed_s"] * 1e9,
               f"{r['seed_tok_s']:.1f} tok/s")
     table.add("serve device-resident engine", r["engine_s"] * 1e9,
-              f"{r['engine_tok_s']:.1f} tok/s ({r['speedup']:.1f}x)")
+              f"{r['engine_tok_s']:.1f} tok/s ({r['speedup']:.1f}x, "
+              f"KV util {r['kv_util_mean']:.0%})")
+    c = capacity_compare(requests=12, max_new=16)
+    table.add("serve paged KV pool (equal KV mem)",
+              c["paged"]["s"] * 1e9,
+              f"{c['paged']['tok_s']:.1f} tok/s, "
+              f"{c['paged']['peak_live_slots']} live slots vs "
+              f"{c['dense']['peak_live_slots']} dense, "
+              f"KV util {c['paged']['kv_util_mean']:.0%} vs "
+              f"{c['dense']['kv_util_mean']:.0%}")
 
 
 def main() -> None:
@@ -121,28 +188,56 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--max-len", type=int, default=96)
     ap.add_argument("--sync-every", type=int, default=8)
+    ap.add_argument("--paged", action="store_true",
+                    help="serve through the paged KV-cache block pool")
+    ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--smoke", action="store_true",
                     help="CI sanity: engine only, tiny sizes, ~5s")
     args = ap.parse_args()
     if args.smoke:
         r = bench(args.arch, batch=2, requests=3, max_new=4, max_len=32,
-                  sync_every=4, smoke=True)
+                  sync_every=4, smoke=True, paged=args.paged,
+                  page_size=min(args.page_size, 8))
         assert r["engine_tok_s"] > 0, r
-        print(f"[serve_bench --smoke] {r['tokens']} tokens, "
-              f"{r['engine_tok_s']:.1f} tok/s on {jax.default_backend()}")
+        if args.paged:
+            assert r["pages_reclaimed"], "retired pages were not reclaimed"
+        mode = "paged" if args.paged else "dense"
+        print(f"[serve_bench --smoke] {mode}: {r['tokens']} tokens, "
+              f"{r['engine_tok_s']:.1f} tok/s, "
+              f"KV util {r['kv_util_mean']:.0%} "
+              f"on {jax.default_backend()}")
         return
     r = bench(args.arch, batch=args.batch, requests=args.requests,
               max_new=args.max_new, max_len=args.max_len,
-              sync_every=args.sync_every)
-    print(f"[serve_bench] arch={r['arch']} tokens={r['tokens']} "
-          f"backend={jax.default_backend()}")
+              sync_every=args.sync_every, paged=args.paged,
+              page_size=args.page_size)
+    mode = "paged" if args.paged else "dense"
+    print(f"[serve_bench] arch={r['arch']} mode={mode} "
+          f"tokens={r['tokens']} backend={jax.default_backend()}")
     print(f"  seed per-token loop : {r['seed_tok_s']:8.1f} tok/s "
           f"({r['seed_s']:.2f}s)")
     print(f"  device-resident loop: {r['engine_tok_s']:8.1f} tok/s "
           f"({r['engine_s']:.2f}s)")
     print(f"  speedup             : {r['speedup']:.2f}x")
+    print(f"  KV utilization      : mean {r['kv_util_mean']:.1%}, "
+          f"peak {r['kv_util_peak']:.1%} "
+          f"(live tokens / allocated capacity)")
     assert r["speedup"] >= 3.0, \
         f"serving regressed: engine only {r['speedup']:.2f}x the seed loop"
+
+    c = capacity_compare(args.arch, max_new=args.max_new,
+                         max_len=args.max_len, page_size=args.page_size)
+    d, p = c["dense"], c["paged"]
+    print(f"[capacity @ equal KV memory] dense: {d['tok_s']:.1f} tok/s, "
+          f"peak {d['peak_live_slots']} live slots, "
+          f"KV util {d['kv_util_mean']:.1%}")
+    print(f"                             paged: {p['tok_s']:.1f} tok/s, "
+          f"peak {p['peak_live_slots']} live slots, "
+          f"KV util {p['kv_util_mean']:.1%}, "
+          f"reclaimed={p['pages_reclaimed']}")
+    assert (p["peak_live_slots"] > d["peak_live_slots"]
+            or (p["tok_s"] >= 0.9 * d["tok_s"] and p["pages_reclaimed"])), \
+        "paged pool shows no capacity or throughput win over dense"
 
 
 if __name__ == "__main__":

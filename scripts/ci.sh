@@ -1,12 +1,21 @@
 #!/usr/bin/env bash
-# CI gate: tier-1 tests + a serving-throughput liveness check.
+# CI gate: tier-1 tests + serving-throughput liveness checks.
 #
-#   scripts/ci.sh          # from anywhere inside the repo
+#   scripts/ci.sh          # fast tier: -m "not slow" + dense/paged smokes
+#   CI_FULL=1 scripts/ci.sh  # additionally run the slow-marked tests
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-echo "== tier-1: pytest =="
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+echo "== tier-1 (fast): pytest -m 'not slow' =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q -m "not slow"
 
-echo "== serving throughput smoke =="
+if [[ "${CI_FULL:-0}" == "1" ]]; then
+  echo "== tier-1 (slow markers) =="
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q -m "slow"
+fi
+
+echo "== serving throughput smoke (dense) =="
 timeout 300 python benchmarks/serve_bench.py --smoke
+
+echo "== serving throughput smoke (paged KV cache) =="
+timeout 300 python benchmarks/serve_bench.py --paged --smoke

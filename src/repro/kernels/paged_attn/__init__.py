@@ -1,0 +1,2 @@
+from .ops import paged_attn, paged_attn_xla  # noqa: F401
+from .ref import gather_pages, paged_attn_ref  # noqa: F401

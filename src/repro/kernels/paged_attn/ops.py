@@ -1,0 +1,59 @@
+"""Public paged decode-attention op.
+
+``paged_attn`` is the page-table analogue of ``decode_attn``: one-token
+GQA queries against K/V pages gathered through a per-slot page table, with
+per-slot live lengths.  Grid pruning is shape-driven — callers slice the
+table to a host-known bound on the deepest live slot's page count (the
+serving engine's page-count bucketing), so the kernel grid *is* the pruned
+page count; per-slot skipping inside the kernel handles the rest.
+
+Routing (kernel vs XLA gather, interpret on/off) reuses the
+``DecodeAttnPolicy`` from :mod:`repro.kernels.decode_attn` — the decision
+is about the backend, not about which cache layout is in play.
+
+Sentinel handling: unallocated table entries are ``>= n_pages`` (the
+pool's OOB id, chosen so cache *scatters* through them drop).  For reads
+they are clamped to a valid page here, once, and masked by ``lengths``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import paged_attn_kernel
+from .ref import gather_pages
+
+
+def _clamp_table(table: jnp.ndarray, n_pages: int) -> jnp.ndarray:
+    return jnp.minimum(table.astype(jnp.int32), n_pages - 1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attn(q: jnp.ndarray, k_pages: jnp.ndarray, v_pages: jnp.ndarray,
+               table: jnp.ndarray, lengths: jnp.ndarray, *,
+               interpret: bool = True) -> jnp.ndarray:
+    """q: [B, Hq, D] one-token queries; k_pages/v_pages: [N, ps, Hkv, D]
+    pooled pages; table: [B, P] int32; slot b attends over the first
+    ``lengths[b]`` tokens of its pages in table order."""
+    b, hq, d = q.shape
+    hkv = k_pages.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d)
+    tbl = _clamp_table(table, k_pages.shape[0])
+    ln = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32).reshape(-1), (b,))
+    out = paged_attn_kernel(qg, k_pages, v_pages, tbl, ln,
+                            interpret=interpret)
+    return out.reshape(b, hq, d)
+
+
+def paged_attn_xla(q: jnp.ndarray, k_pages: jnp.ndarray,
+                   v_pages: jnp.ndarray, table: jnp.ndarray,
+                   lengths: jnp.ndarray) -> jnp.ndarray:
+    """Gather-then-attend fallback: identical math on the XLA path (used
+    off-TPU where the Pallas interpreter would sit in the hot loop)."""
+    from ..decode_attn.ref import decode_attn_ref
+    k = gather_pages(k_pages, table)
+    v = gather_pages(v_pages, table)
+    return decode_attn_ref(q, k, v, lengths).astype(q.dtype)

@@ -1,0 +1,25 @@
+"""Oracle: one-token GQA attention gathered through a page table."""
+import jax.numpy as jnp
+
+from ..decode_attn.ref import decode_attn_ref
+
+
+def gather_pages(pool: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """pool: [N, ps, ...]; table: [B, P] int32 page ids (entries >= N are
+    unallocated and clamp to the last page — callers mask by length).
+    Returns the contiguous view [B, P * ps, ...]."""
+    n, ps = pool.shape[:2]
+    gathered = pool[jnp.minimum(table, n - 1)]        # [B, P, ps, ...]
+    return gathered.reshape((table.shape[0], table.shape[1] * ps)
+                            + pool.shape[2:])
+
+
+def paged_attn_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
+                   v_pages: jnp.ndarray, table: jnp.ndarray,
+                   lengths: jnp.ndarray) -> jnp.ndarray:
+    """q: [B, Hq, D]; k_pages/v_pages: [N, ps, Hkv, D]; table: [B, P];
+    lengths: [B] int32 — slot b attends over its first lengths[b] tokens
+    in page-table order."""
+    k = gather_pages(k_pages, table)
+    v = gather_pages(v_pages, table)
+    return decode_attn_ref(q, k, v, lengths)

@@ -22,14 +22,18 @@ from ..serve.scheduler import Batcher
 def run(arch: str, *, reduced: bool = True, requests: int = 4,
         max_new: int = 8, batch: int = 4, max_len: int = 64,
         seed: int = 0, sync_every: int = 8, temperature: float = 0.0,
-        eos_id: int | None = None, attn_mode: str = "auto") -> dict:
+        eos_id: int | None = None, attn_mode: str = "auto",
+        paged: bool = False, page_size: int = 16,
+        total_pages: int | None = None) -> dict:
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
     model = Model(cfg)
     params = pm.unwrap(model.init(jax.random.key(seed)))
     scfg = ServeConfig(max_len=max_len, batch=batch, sync_every=sync_every,
-                       temperature=temperature, attn_mode=attn_mode)
+                       temperature=temperature, attn_mode=attn_mode,
+                       paged=paged, page_size=page_size,
+                       total_pages=total_pages)
     b = Batcher(model, params, scfg, eos_id=eos_id, seed=seed)
     rng = np.random.default_rng(seed)
     for rid in range(requests):
@@ -40,9 +44,13 @@ def run(arch: str, *, reduced: bool = True, requests: int = 4,
     results = b.run(max_new=max_new)
     dt = time.perf_counter() - t0
     toks = sum(len(v) for v in results.values())
+    util = b.kv_utilization()
+    mode = (f"paged pool {b.pool.n_pages}x{b.pool.page_size}" if paged
+            else "dense")
     print(f"[serve] {len(results)} requests, {toks} tokens in {dt:.1f}s "
-          f"({toks / dt:.1f} tok/s on {jax.default_backend()})")
-    return {"results": results, "tok_per_s": toks / dt}
+          f"({toks / dt:.1f} tok/s on {jax.default_backend()}, {mode}, "
+          f"KV util {util['mean_util']:.0%})")
+    return {"results": results, "tok_per_s": toks / dt, "kv_util": util}
 
 
 def main() -> None:
@@ -58,11 +66,17 @@ def main() -> None:
     ap.add_argument("--eos-id", type=int, default=None)
     ap.add_argument("--attn-mode", default="auto",
                     choices=("auto", "kernel", "xla"))
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: block pool + per-slot page tables")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--total-pages", type=int, default=None,
+                    help="pool size in pages (default: dense-equivalent)")
     args = ap.parse_args()
     run(args.arch, reduced=args.reduced, requests=args.requests,
         max_new=args.max_new, batch=args.batch, max_len=args.max_len,
         sync_every=args.sync_every, temperature=args.temperature,
-        eos_id=args.eos_id, attn_mode=args.attn_mode)
+        eos_id=args.eos_id, attn_mode=args.attn_mode, paged=args.paged,
+        page_size=args.page_size, total_pages=args.total_pages)
 
 
 if __name__ == "__main__":

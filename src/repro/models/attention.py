@@ -36,6 +36,16 @@ class KVCache(NamedTuple):
     length: jnp.ndarray      # [] int32: tokens filled
 
 
+class PagedKVCache(NamedTuple):
+    """Paged layout: K/V pages live in one pooled allocation shared by all
+    slots; ``table`` names each slot's pages in order (entries >= n_pages
+    are unallocated — scatters through them drop, reads clamp + mask)."""
+    k: jnp.ndarray           # [n_pages, page_size, Hkv, D] (latent for MLA)
+    v: jnp.ndarray           # [n_pages, page_size, Hkv, D] (rope-key MLA)
+    table: jnp.ndarray       # [B, P] int32 page ids
+    length: jnp.ndarray      # [B] int32: tokens filled per slot
+
+
 # --------------------------------------------------------------------------
 # softmax attention cores
 # --------------------------------------------------------------------------
@@ -141,6 +151,47 @@ def _cache_insert(buf: jnp.ndarray, vals: jnp.ndarray, length) -> jnp.ndarray:
     return buf.at[bidx, pos].set(vals, mode="drop")
 
 
+def _paged_insert(pool: jnp.ndarray, vals: jnp.ndarray,
+                  table: jnp.ndarray, length: jnp.ndarray) -> jnp.ndarray:
+    """Scatter ``vals`` [B, L, ...] into the page pool [N, ps, ...]:
+    row b's token at sequence position ``length[b] + t`` lands in page
+    ``table[b, (length[b] + t) // ps]`` at offset ``% ps``.  Positions
+    whose logical page is unallocated (sentinel id >= N) or beyond the
+    table width drop — exactly the dense path's out-of-range semantics,
+    and how a join masks non-joining rows out of a shared prefill."""
+    vals = vals.astype(pool.dtype)
+    n, ps = pool.shape[0], pool.shape[1]
+    b, l = vals.shape[:2]
+    p_max = table.shape[1]
+    pos = jnp.asarray(length, jnp.int32)[:, None] + jnp.arange(l)[None, :]
+    logical = pos // ps                                        # [B, L]
+    bidx = jnp.arange(b)[:, None]
+    page = jnp.where(logical < p_max,
+                     table[bidx, jnp.minimum(logical, p_max - 1)], n)
+    flat_vals = vals.reshape((b * l,) + vals.shape[2:])
+    return pool.at[page.reshape(-1), (pos % ps).reshape(-1)].set(
+        flat_vals, mode="drop")
+
+
+def _paged_gather(pool: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """Pages -> contiguous [B, P * ps, ...] view for the XLA attention
+    path (sentinels clamp; callers mask by per-slot length)."""
+    from ..kernels.paged_attn import gather_pages
+    return gather_pages(pool, table)
+
+
+def _paged_kernel_route(q, cache: "PagedKVCache", kv_len, dtype):
+    """Route one-token GQA decode through the paged Pallas kernel.  The
+    grid is the table width — the engine slices the table to its
+    page-count bucket, so dead pages are never launched."""
+    from ..kernels.paged_attn import paged_attn
+    pol = _decode_policy()
+    out = paged_attn(q[:, 0], cache.k.astype(dtype), cache.v.astype(dtype),
+                     cache.table, kv_len,
+                     interpret=pol.resolve_interpret())
+    return out[:, None]
+
+
 def _decode_kernel_route(q, kc, vc, kv_len, dtype):
     """Route one-token GQA decode attention through the Pallas kernel when
     the active policy asks for it.  q: [B,1,Hq,D] -> [B,1,Hq,D].  The
@@ -214,7 +265,20 @@ def gqa_apply(params: dict, x: jnp.ndarray, cfg: ArchConfig, *,
     else:
         k, v = kv_override
     new_cache = None
-    if cache is not None and kv_override is None:
+    if isinstance(cache, PagedKVCache) and kv_override is None:
+        kp = _paged_insert(cache.k, k, cache.table, cache.length)
+        vp = _paged_insert(cache.v, v, cache.table, cache.length)
+        kv_len = cache.length + x.shape[1]
+        new_cache = PagedKVCache(kp, vp, cache.table, kv_len)
+        pol = _decode_policy()
+        if x.shape[1] == 1 and not ctx_shard and pol.kernel_wanted():
+            out = _paged_kernel_route(q, new_cache, kv_len, x.dtype)
+        else:
+            kc = _paged_gather(kp, cache.table).astype(x.dtype)
+            vc = _paged_gather(vp, cache.table).astype(x.dtype)
+            out = attention_core(q, kc, vc, causal=True,
+                                 q_offset=cache.length, kv_len=kv_len)
+    elif cache is not None and kv_override is None:
         kc = _cache_insert(cache.k, k, cache.length)
         vc = _cache_insert(cache.v, v, cache.length)
         kv_len = cache.length + x.shape[1]
@@ -298,7 +362,18 @@ def mla_apply(params: dict, x: jnp.ndarray, cfg: ArchConfig, *,
     q_lat = jnp.einsum("bthq,rhq->bthr", q_nope,
                        params["uk"]["w"].astype(x.dtype))
     new_cache = None
-    if cache is not None:
+    if isinstance(cache, PagedKVCache):
+        ckv_p = _paged_insert(cache.k, c_kv, cache.table, cache.length)
+        kr_p = _paged_insert(cache.v, k_rope, cache.table, cache.length)
+        kv_len = cache.length + x.shape[1]
+        new_cache = PagedKVCache(ckv_p, kr_p, cache.table, kv_len)
+        # MLA's absorbed decode is already a latent gather; the paged path
+        # stays on the XLA gather (no per-head pages to walk in the kernel)
+        c_kv_all = _paged_gather(ckv_p, cache.table).astype(x.dtype)
+        k_rope_all = _paged_gather(kr_p, cache.table).astype(x.dtype)
+        q_offset = cache.length
+        causal_here = True
+    elif cache is not None:
         ckv_c = _cache_insert(cache.k, c_kv, cache.length)
         kr_c = _cache_insert(cache.v, k_rope, cache.length)
         new_cache = KVCache(ckv_c, kr_c, cache.length + x.shape[1])

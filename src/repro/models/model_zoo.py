@@ -14,7 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from . import transformer
-from .transformer import forward, init_caches, init_lm, lm_loss, logits_fn
+from .transformer import (forward, init_caches, init_lm, init_paged_caches,
+                          lm_loss, logits_fn)
 from ..configs import get_config
 from ..configs.base import ArchConfig, Frontend, ShapeConfig
 
@@ -75,19 +76,47 @@ class Model:
         logits = logits_fn(params, h, self.cfg)
         return logits, caches
 
+    def prefill_paged(self, params, batch, caches, pages, *,
+                      dtype=jnp.bfloat16, last_pos=None):
+        """Paged prefill: write the prompt's K/V through ``pages`` ([B, P]
+        page table) into the pooled ``caches`` (from ``init_paged_caches``)
+        instead of allocating per-slot stripes.  Rows whose table entries
+        are all sentinels write nothing (their scatters drop) — that is how
+        the serving join prefills only the slots being refilled while the
+        other slots' pages stay bit-for-bit intact."""
+        b = batch["tokens"].shape[0]
+        hidden, caches, _ = forward(params, batch, self.cfg, caches=caches,
+                                    cache_len=jnp.zeros((b,), jnp.int32),
+                                    dtype=dtype, pages=pages)
+        if last_pos is None:
+            h = hidden[:, -1:]
+        else:
+            lp = jnp.clip(jnp.asarray(last_pos, jnp.int32), 0,
+                          hidden.shape[1] - 1)
+            h = hidden[jnp.arange(hidden.shape[0]), lp][:, None]
+        logits = logits_fn(params, h, self.cfg)
+        return logits, caches
+
     def decode_step(self, params, tokens, caches, cache_len, *,
-                    dtype=jnp.bfloat16, extra: dict | None = None):
-        """One decode step: tokens [B, 1] against filled caches."""
+                    dtype=jnp.bfloat16, extra: dict | None = None,
+                    pages=None):
+        """One decode step: tokens [B, 1] against filled caches (dense, or
+        paged when ``pages`` carries the slots' page tables)."""
         batch = {"tokens": tokens}
         if extra:
             batch.update(extra)
         hidden, caches, _ = forward(params, batch, self.cfg, caches=caches,
-                                    cache_len=cache_len, dtype=dtype)
+                                    cache_len=cache_len, dtype=dtype,
+                                    pages=pages)
         logits = logits_fn(params, hidden, self.cfg)
         return logits, caches
 
     def init_caches(self, batch: int, max_len: int, dtype=jnp.bfloat16):
         return init_caches(self.cfg, batch, max_len, dtype)
+
+    def init_paged_caches(self, batch: int, n_pages: int, page_size: int,
+                          dtype=jnp.bfloat16):
+        return init_paged_caches(self.cfg, batch, n_pages, page_size, dtype)
 
     # ----------------------------- dry-run inputs ------------------------
     def input_specs(self, shape: ShapeConfig, dtype=jnp.bfloat16) -> dict:

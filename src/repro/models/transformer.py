@@ -24,7 +24,8 @@ import jax
 import jax.numpy as jnp
 
 from . import param as pm
-from .attention import KVCache, attention_apply, init_attention
+from .attention import (KVCache, PagedKVCache, attention_apply,
+                        init_attention)
 from .layers import (dense, embed, init_dense, init_embedding, init_layernorm,
                      init_mlp, init_rmsnorm, layernorm, mlp, rmsnorm, unembed)
 from .moe import init_moe, moe_apply
@@ -133,6 +134,28 @@ def init_caches(cfg: ArchConfig, batch: int, max_len: int,
     return caches
 
 
+def init_paged_caches(cfg: ArchConfig, batch: int, n_pages: int,
+                      page_size: int, dtype=jnp.bfloat16) -> list:
+    """Paged variant of :func:`init_caches`: attention segments hold one
+    pooled ``[layers, n_pages, page_size, ...]`` allocation shared by every
+    slot through the page table (see repro.serve.kvpool); SSM segments keep
+    their per-slot recurrent state — it is O(1) in sequence length, there
+    is nothing to page."""
+    caches = []
+    kshape, vshape = _attn_cache_shape(cfg, n_pages, page_size)
+    for seg in cfg.resolved_segments():
+        n = seg.count
+        if seg.kind is BlockKind.SSM:
+            single = init_ssm_cache(cfg, batch, dtype)
+            caches.append(jax.tree_util.tree_map(
+                lambda a: jnp.zeros((n,) + a.shape, a.dtype), single))
+        else:
+            caches.append({
+                "k": jnp.zeros((n,) + kshape, dtype),
+                "v": jnp.zeros((n,) + vshape, dtype)})
+    return caches
+
+
 # ---------------------------------------------------------------------------
 # model init
 # ---------------------------------------------------------------------------
@@ -182,8 +205,11 @@ def init_lm(key: jax.Array, cfg: ArchConfig) -> dict:
 # ---------------------------------------------------------------------------
 
 def _scan_segment(stacked, x, cfg, kind, *, positions, offset, cache,
-                  cross_kv, causal, remat):
-    """cache: None | {"k","v"} stacked | SsmCache of stacked arrays."""
+                  cross_kv, causal, remat, pages=None):
+    """cache: None | {"k","v"} stacked | SsmCache of stacked arrays.
+    ``pages`` ([B, P] int32 page table) switches attention caches to the
+    paged layout — the table is shared by every layer (same logical page
+    geometry), only the pooled pages differ per layer."""
     is_ssm = kind is BlockKind.SSM
 
     def call(p, h, c):
@@ -205,7 +231,12 @@ def _scan_segment(stacked, x, cfg, kind, *, positions, offset, cache,
     def body(carry, xs):
         h, aux = carry
         p, craw = xs
-        c = craw if is_ssm else KVCache(craw["k"], craw["v"], offset)
+        if is_ssm:
+            c = craw
+        elif pages is not None:
+            c = PagedKVCache(craw["k"], craw["v"], pages, offset)
+        else:
+            c = KVCache(craw["k"], craw["v"], offset)
         y, new_c, a = call(p, h, c)
         if not is_ssm:
             new_c = {"k": new_c.k, "v": new_c.v}
@@ -232,11 +263,15 @@ def encode(params: dict, frames: jnp.ndarray, cfg: ArchConfig):
 
 def forward(params: dict, batch: dict, cfg: ArchConfig, *,
             caches: list | None = None, cache_len: jnp.ndarray | None = None,
-            dtype=jnp.bfloat16, remat: bool = False):
+            dtype=jnp.bfloat16, remat: bool = False,
+            pages: jnp.ndarray | None = None):
     """Returns (hidden [B,L,D], new_caches, aux_loss).
 
     batch: tokens [B, L]; optional vision_embeds [B, Tv, D] (prefix),
     encoder_frames [B, Te, D] or cross_kv (precomputed encoder output).
+    ``pages`` ([B, P] int32): attention caches are the paged pools from
+    :func:`init_paged_caches`, addressed through this per-slot page table
+    (``cache_len`` must then be per-slot, [B] int32).
     """
     from ..distributed.act_sharding import constrain_btd
     tokens = batch["tokens"]
@@ -263,7 +298,10 @@ def forward(params: dict, batch: dict, cfg: ArchConfig, *,
         cache_i = caches[i] if caches is not None else None
         if seg.kind is BlockKind.SHARED_ATTN:
             c = None
-            if cache_i is not None:
+            if cache_i is not None and pages is not None:
+                c = PagedKVCache(cache_i["k"][0], cache_i["v"][0], pages,
+                                 offset)
+            elif cache_i is not None:
                 c = KVCache(cache_i["k"][0], cache_i["v"][0], offset)
             y, nc, aux = block_apply(params["shared_block"], x, cfg,
                                      BlockKind.DENSE, positions=positions,
@@ -275,7 +313,7 @@ def forward(params: dict, batch: dict, cfg: ArchConfig, *,
             y, nc, aux = _scan_segment(
                 params["segments"][i], x, cfg, seg.kind,
                 positions=positions, offset=offset, cache=cache_i,
-                cross_kv=cross_kv, causal=True, remat=remat)
+                cross_kv=cross_kv, causal=True, remat=remat, pages=pages)
             new_caches.append(nc)
         x = y
         aux_total = aux_total + aux

@@ -1,4 +1,7 @@
 """Serving: jitted prefill/decode-loop engine + slot-based continuous
-batching scheduler."""
-from .engine import ServeConfig, jit_decode_loop, jit_decode_step  # noqa: F401
+batching scheduler, with dense (per-slot stripe) and paged (block-pool)
+KV-cache layouts."""
+from .engine import (ServeConfig, jit_decode_loop,  # noqa: F401
+                     jit_decode_step, jit_paged_decode_loop, jit_paged_join)
+from .kvpool import KVPool, PageError  # noqa: F401
 from .scheduler import Batcher, ContinuousBatcher  # noqa: F401

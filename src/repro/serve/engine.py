@@ -41,6 +41,22 @@ class ServeConfig:
     sync_every: int = 8          # decode steps per host sync (scan length)
     attn_mode: str = "auto"      # decode attention: "kernel"|"xla"|"auto"
     attn_interpret: bool | None = None   # None -> off on TPU, on elsewhere
+    # paged KV cache (repro.serve.kvpool): fixed-size pages in one pooled
+    # allocation, per-slot page tables, admission on free-page capacity
+    paged: bool = False
+    page_size: int = 16          # KV rows per page
+    total_pages: int | None = None   # pool size; None -> batch * max pages
+    #   (i.e. the same token capacity as the dense slot table)
+
+    @property
+    def max_pages(self) -> int:
+        """Page-table width: pages needed for a full-length slot."""
+        return -(-self.max_len // self.page_size)
+
+    @property
+    def pool_pages(self) -> int:
+        return (self.total_pages if self.total_pages is not None
+                else self.batch * self.max_pages)
 
 
 def sample_tokens(logits: jnp.ndarray, key: jax.Array,
@@ -93,26 +109,40 @@ def make_prefill(model: Model, cfg: ServeConfig):
 # ---------------------------------------------------------------------------
 
 def make_decode_loop(model: Model, cfg: ServeConfig, *, steps: int,
-                     eos_id: int | None, kv_cap: int | None = None):
+                     eos_id: int | None, kv_cap: int | None = None,
+                     paged: bool = False):
     """Build the fused multi-token decode driver.
 
-    Returns ``loop(params, tok, caches, lengths, done, remaining, key) ->
-    ((tok, caches, lengths, done, remaining, key), emitted)`` where
-    ``emitted`` is [steps, B] int32 with PAD_TOKEN in retired slots.  All
-    state stays on device across the scan; per-slot ``lengths`` drive the
-    cache writes, RoPE positions and attention masks, ``done`` freezes
+    Returns ``loop(params, tok, caches, lengths, done, remaining, key
+    [, pages]) -> ((tok, caches, lengths, done, remaining, key), emitted)``
+    where ``emitted`` is [steps, B] int32 with PAD_TOKEN in retired slots.
+    All state stays on device across the scan; per-slot ``lengths`` drive
+    the cache writes, RoPE positions and attention masks, ``done`` freezes
     retired slots (EOS or budget), and sampling happens on device.
+
+    With ``paged`` the loop additionally takes ``pages`` — the [B, P_cap]
+    slice of the device page table, held constant across the scan (the
+    scheduler reserves every slot's worst case at admission, so a segment
+    can never outgrow its pages).  ``P_cap`` then plays ``kv_cap``'s role,
+    but the pruning is shape-driven instead of policy-driven: the
+    scheduler buckets the deepest live slot's *page count* to a power of
+    two and slices the table before the call, so the paged-attention grid
+    (and the XLA gather width) is the bucket — dead pages are never
+    launched.  One executable is cached per (steps, P_cap) bucket, exactly
+    like the dense loop's (steps, kv_cap) keying.
     """
     temp = cfg.temperature
 
-    def loop(params, tok, caches, lengths, done, remaining, key):
+    def loop(params, tok, caches, lengths, done, remaining, key,
+             pages=None):
         def body(carry, _):
             tok, caches, lengths, done, remaining, key = carry
             with decode_attn_policy(mode=cfg.attn_mode,
                                     interpret=cfg.attn_interpret,
-                                    kv_cap=kv_cap):
+                                    kv_cap=None if paged else kv_cap):
                 logits, caches = model.decode_step(
-                    params, tok, caches, lengths, dtype=cfg.dtype)
+                    params, tok, caches, lengths, dtype=cfg.dtype,
+                    pages=pages)
             key, sub = jax.random.split(key)
             nxt = sample_tokens(logits[:, -1], sub, temp)
             emit = jnp.where(done, PAD_TOKEN, nxt)
@@ -140,6 +170,15 @@ def jit_decode_loop(model: Model, cfg: ServeConfig, *, steps: int,
     arrays — tokens, lengths, flags, key — are copied)."""
     loop = make_decode_loop(model, cfg, steps=steps, eos_id=eos_id,
                             kv_cap=kv_cap)
+    return jax.jit(loop, donate_argnums=(2,))
+
+
+def jit_paged_decode_loop(model: Model, cfg: ServeConfig, *, steps: int,
+                          eos_id: int | None):
+    """Jitted paged decode segment — :func:`make_decode_loop` with
+    ``paged=True`` (the call site passes the sliced page table)."""
+    loop = make_decode_loop(model, cfg, steps=steps, eos_id=eos_id,
+                            paged=True)
     return jax.jit(loop, donate_argnums=(2,))
 
 
@@ -186,4 +225,58 @@ def make_join(model: Model, cfg: ServeConfig, *, eos_id: int | None):
 
 def jit_join(model: Model, cfg: ServeConfig, *, eos_id: int | None):
     join = make_join(model, cfg, eos_id=eos_id)
+    return jax.jit(join, donate_argnums=(1, 2, 3, 4, 5))
+
+
+def make_paged_join(model: Model, cfg: ServeConfig, *, eos_id: int | None):
+    """Paged slot refill.  For *attention* segments there is nothing to
+    select afterwards: the batch prefill *writes through the page table*,
+    and rows outside ``join_mask`` get an all-sentinel table so their
+    scatters drop — occupied slots' pages stay bit-for-bit intact inside
+    one shared pooled allocation.  SSM segments have per-slot recurrent
+    state, not pages (init_paged_caches keeps them dense), so the prefill's
+    recompute of every row must still be masked back with the dense join's
+    batch-axis select — only joining rows take the fresh state.  ``pages``
+    is the full-width device page table; only its masked copy is handed to
+    the prefill."""
+    from ..configs.base import BlockKind
+    temp = cfg.temperature
+    sentinel = cfg.pool_pages      # OOB page id (see kvpool.KVPool)
+    seg_kinds = [s.kind for s in model.cfg.resolved_segments()]
+
+    def join(params, caches, tok, lengths, done, remaining,
+             join_mask, prompts, plens, budgets, key, pages):
+        write_tbl = jnp.where(join_mask[:, None], pages, sentinel)
+        with decode_attn_policy(mode=cfg.attn_mode,
+                                interpret=cfg.attn_interpret):
+            logits, new_caches = model.prefill_paged(
+                params, {"tokens": prompts}, caches, write_tbl,
+                dtype=cfg.dtype, last_pos=plens - 1)
+
+        def select(new, old):
+            # leaves are [layers, B, ...]: mask on the batch axis
+            m = join_mask.reshape((1, join_mask.shape[0])
+                                  + (1,) * (new.ndim - 2))
+            return jnp.where(m, new.astype(old.dtype), old)
+
+        caches = [jax.tree_util.tree_map(select, nc, oc)
+                  if kind is BlockKind.SSM else nc
+                  for kind, nc, oc in zip(seg_kinds, new_caches, caches)]
+        key, sub = jax.random.split(key)
+        first = sample_tokens(logits[:, -1], sub, temp)
+        if eos_id is None:
+            is_eos = jnp.zeros_like(join_mask)
+        else:
+            is_eos = first == eos_id
+        rem_new = budgets - 1
+        tok = jnp.where(join_mask[:, None], first[:, None], tok)
+        lengths = jnp.where(join_mask, plens, lengths)
+        remaining = jnp.where(join_mask, rem_new, remaining)
+        done = jnp.where(join_mask, is_eos | (rem_new <= 0), done)
+        return caches, tok, lengths, done, remaining, key, first
+    return join
+
+
+def jit_paged_join(model: Model, cfg: ServeConfig, *, eos_id: int | None):
+    join = make_paged_join(model, cfg, eos_id=eos_id)
     return jax.jit(join, donate_argnums=(1, 2, 3, 4, 5))

@@ -1,0 +1,160 @@
+"""Block-pool KV-cache memory manager (host side of the paged subsystem).
+
+The dense slot table (PR 1) gives every slot a ``[max_len]`` KV stripe, so
+memory is capped by ``slots x max_len`` whether or not those tokens exist —
+retired and short requests strand capacity.  The paper's co-design lesson
+(§4.2 blocked placement, §5.1.2 command skipping) is to never spend
+commands or capacity on dead data, and PrIM-style studies put placement
+management, not compute, at the center of near-memory wins.  The paged
+analogue: KV lives in fixed-size **pages** inside one pooled allocation
+(``[layers, n_pages, page_size, kv_heads, head_dim]`` per segment, see
+:func:`repro.models.transformer.init_paged_caches`); each slot holds an
+ordered list of page ids (its **page table**), pages come from a free list,
+and retirement returns every page exactly once.
+
+This class is pure host bookkeeping — no jax.  The device sees only the
+``table`` array ([slots, max_pages] int32, unallocated entries =
+``sentinel`` = ``n_pages``, i.e. one past the pool so scatters through them
+drop); the scheduler uploads (a column-slice of) it around each decode
+segment.  ``refcount`` is carried per page and today is only ever 0/1 —
+it is the hook for prefix sharing (ROADMAP), where a shared prompt page
+would be mapped into several tables and freed on the last release.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class PageError(RuntimeError):
+    """Allocator invariant violation (double free, over-allocation)."""
+
+
+class KVPool:
+    """Free-list page allocator + per-slot page tables.
+
+    ``n_pages`` fixed-size pages of ``page_size`` tokens are shared by
+    ``slots`` decode slots, each of which may map at most ``max_pages``
+    pages.  All methods are O(pages touched); nothing allocates device
+    memory — the pooled KV arrays themselves live in the model caches.
+    """
+
+    def __init__(self, n_pages: int, page_size: int, slots: int,
+                 max_pages: int | None = None):
+        if n_pages <= 0 or page_size <= 0 or slots <= 0:
+            raise ValueError("n_pages, page_size and slots must be positive")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.slots = slots
+        self.max_pages = max_pages if max_pages is not None else n_pages
+        self.sentinel = n_pages            # OOB page id: scatters drop
+        # LIFO free list: recently freed pages are re-used first (their
+        # HBM is warm and the table stays dense at the low ids).
+        self._free: list[int] = list(range(n_pages - 1, -1, -1))
+        self.refcount = np.zeros((n_pages,), np.int32)
+        self.table = np.full((slots, self.max_pages), self.sentinel,
+                             np.int32)
+        self._slot_pages: list[list[int]] = [[] for _ in range(slots)]
+
+    # ------------------------------------------------------------------
+    # capacity queries (the scheduler's admission rule)
+    # ------------------------------------------------------------------
+    def pages_for(self, tokens: int) -> int:
+        """Pages needed to hold ``tokens`` KV rows."""
+        return -(-max(0, tokens) // self.page_size)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.n_pages - len(self._free)
+
+    def can_admit(self, tokens: int) -> bool:
+        """Would ``reserve`` for a ``tokens``-token request succeed?"""
+        n = self.pages_for(tokens)
+        return n <= min(len(self._free), self.max_pages)
+
+    def slot_pages(self, slot: int) -> list[int]:
+        return list(self._slot_pages[slot])
+
+    # ------------------------------------------------------------------
+    # allocate / release
+    # ------------------------------------------------------------------
+    def reserve(self, slot: int, tokens: int) -> list[int]:
+        """Map pages for a ``tokens``-token request onto ``slot``.
+
+        The whole worst case (prompt + budget) is reserved up front, so a
+        request can never run out of pages mid-segment; the win over dense
+        is that the reservation is ``ceil(tokens / page_size)`` pages, not
+        ``max_len``, and it is returned the moment the slot retires.
+        """
+        if self._slot_pages[slot]:
+            raise PageError(f"slot {slot} already holds pages")
+        n = self.pages_for(tokens)
+        if n > self.max_pages:
+            raise PageError(
+                f"request needs {n} pages > max_pages {self.max_pages}")
+        if n > len(self._free):
+            raise PageError(
+                f"pool exhausted: need {n} pages, {len(self._free)} free")
+        pages = [self._free.pop() for _ in range(n)]
+        for i, p in enumerate(pages):
+            self.refcount[p] += 1
+            self.table[slot, i] = p
+        self._slot_pages[slot] = pages
+        return pages
+
+    def release(self, slot: int) -> int:
+        """Return every page mapped by ``slot``; returns the count freed.
+
+        Each page's refcount drops by one and the page re-enters the free
+        list only at zero (prefix sharing keeps shared pages alive).
+        Releasing an empty slot is a no-op — but a page leaving the table
+        twice is a hard error.
+        """
+        pages = self._slot_pages[slot]
+        if not pages:
+            return 0
+        freed = 0
+        for p in pages:
+            if self.refcount[p] <= 0:
+                raise PageError(f"double free of page {p} (slot {slot})")
+            self.refcount[p] -= 1
+            if self.refcount[p] == 0:
+                self._free.append(p)
+                freed += 1
+        self._slot_pages[slot] = []
+        self.table[slot, :] = self.sentinel
+        return freed
+
+    # ------------------------------------------------------------------
+    # invariants / metrics
+    # ------------------------------------------------------------------
+    def check(self) -> None:
+        """Assert global allocator consistency (used by the tests)."""
+        counts: dict[int, int] = {}
+        for pages in self._slot_pages:
+            for p in pages:
+                counts[p] = counts.get(p, 0) + 1
+        for p, c in counts.items():
+            if self.refcount[p] != c:
+                raise PageError(
+                    f"page {p} mapped {c}x but refcount {self.refcount[p]}")
+        free = set(self._free)
+        if len(free) != len(self._free):
+            raise PageError("free list contains duplicates")
+        if free & counts.keys():
+            raise PageError("a page is both free and mapped")
+        if len(free) + len(counts) != self.n_pages:
+            raise PageError("free list + mapped pages != pool")
+        for slot, pages in enumerate(self._slot_pages):
+            if list(self.table[slot, :len(pages)]) != pages:
+                raise PageError(f"table row {slot} out of sync")
+            if not (self.table[slot, len(pages):] == self.sentinel).all():
+                raise PageError(f"table row {slot} has stale tail entries")
+
+    def utilization(self, live_tokens: int) -> float:
+        """live tokens / allocated token capacity (1.0 = no page waste)."""
+        cap = self.used_pages * self.page_size
+        return live_tokens / cap if cap else 0.0

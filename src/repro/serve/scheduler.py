@@ -32,6 +32,18 @@ depth before any compute; (2) between segments the host knows the deepest
 live slot, so the engine re-jits the scan with a power-of-two ``kv_cap``
 and the attention op slices the cache to that bound — blocks past *every*
 slot's length are never launched at all.
+
+Paged mode (``cfg.paged``, repro.serve.kvpool): the per-slot ``max_len``
+stripes are replaced by fixed-size pages in one pooled allocation.
+Admission is now on **free-page capacity** — a request joins when the pool
+can hold its prompt + budget (``ceil((plen + max_new) / page_size)``
+pages), not merely when a slot index is free — and a retiring slot returns
+every page to the free list at the segment boundary, so short/early-EOS
+requests stop stranding ``max_len``-sized stripes.  The dense ``kv_cap``
+bucketing becomes **page-count bucketing**: the device page table is
+sliced to a power-of-two bound on the deepest live slot's page count
+(same ``_pow2_bucket`` policy, so segments don't retrace), which prunes
+the paged-attention grid to live pages only.
 """
 from __future__ import annotations
 
@@ -41,7 +53,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .engine import PAD_TOKEN, ServeConfig, jit_decode_loop, jit_join
+from .engine import (PAD_TOKEN, ServeConfig, jit_decode_loop, jit_join,
+                     jit_paged_decode_loop, jit_paged_join)
+from .kvpool import KVPool
 from ..models.model_zoo import Model
 
 
@@ -67,7 +81,16 @@ class ContinuousBatcher:
             collections.deque()
         self.results: dict[int, list[int]] = {}
         b = cfg.batch
-        self.caches = model.init_caches(b, cfg.max_len, cfg.dtype)
+        if cfg.paged:
+            self.pool = KVPool(cfg.pool_pages, cfg.page_size, b,
+                               max_pages=cfg.max_pages)
+            self.caches = model.init_paged_caches(
+                b, cfg.pool_pages, cfg.page_size, cfg.dtype)
+            self._join = jit_paged_join(model, cfg, eos_id=eos_id)
+        else:
+            self.pool = None
+            self.caches = model.init_caches(b, cfg.max_len, cfg.dtype)
+            self._join = jit_join(model, cfg, eos_id=eos_id)
         self.tok = jnp.zeros((b, 1), jnp.int32)
         self.lengths = jnp.zeros((b,), jnp.int32)
         self.done = jnp.ones((b,), bool)
@@ -78,8 +101,10 @@ class ContinuousBatcher:
         self.slot_len = [0] * b
         self.slot_budget = [0] * b
         self.outputs: dict[int, list[int]] = {}
-        self._join = jit_join(model, cfg, eos_id=eos_id)
         self._loops: dict[tuple[int, int | None], object] = {}
+        # KV memory accounting, sampled once per decode segment:
+        # (live tokens, allocated token capacity, live slots)
+        self.kv_samples: list[tuple[int, int, int]] = []
 
     # ------------------------------------------------------------------
     def submit(self, rid: int, prompt: list[int]) -> None:
@@ -88,12 +113,17 @@ class ContinuousBatcher:
         self.queue.append((rid, list(prompt)))
 
     # ------------------------------------------------------------------
-    def _loop(self, steps: int, kv_cap: int | None):
-        keyid = (steps, kv_cap)
+    def _loop(self, steps: int, cap: int | None):
+        keyid = (steps, cap)
         if keyid not in self._loops:
-            self._loops[keyid] = jit_decode_loop(
-                self.model, self.cfg, steps=steps, eos_id=self.eos,
-                kv_cap=kv_cap)
+            if self.cfg.paged:
+                # cap shapes the page-table slice; the jit keys on it
+                self._loops[keyid] = jit_paged_decode_loop(
+                    self.model, self.cfg, steps=steps, eos_id=self.eos)
+            else:
+                self._loops[keyid] = jit_decode_loop(
+                    self.model, self.cfg, steps=steps, eos_id=self.eos,
+                    kv_cap=cap)
         return self._loops[keyid]
 
     def _kv_cap(self, steps: int) -> int | None:
@@ -104,6 +134,16 @@ class ContinuousBatcher:
         cap = _pow2_bucket(max(live) + steps, hi=self.cfg.max_len)
         return None if cap >= self.cfg.max_len else cap
 
+    def _page_cap(self) -> int:
+        """Power-of-two bound on the deepest live slot's *allocated* page
+        count (allocation covers prompt + budget, so a segment can never
+        outgrow it) — the paged analogue of ``_kv_cap``."""
+        live = [len(self.pool.slot_pages(i))
+                for i, r in enumerate(self.slot_rid) if r is not None]
+        if not live:
+            return self.cfg.max_pages
+        return _pow2_bucket(max(live), lo=2, hi=self.cfg.max_pages)
+
     # ------------------------------------------------------------------
     def _refill(self, max_new: int) -> None:
         free = [i for i, r in enumerate(self.slot_rid) if r is None]
@@ -113,7 +153,18 @@ class ContinuousBatcher:
         for slot in free:
             if not self.queue:
                 break
-            take.append((slot, *self.queue.popleft()))
+            if self.pool is not None:
+                # paged admission: the pool must hold prompt + budget.
+                # Head-of-line blocking keeps FIFO order; retirements will
+                # free pages and re-admit at the next segment boundary.
+                rid, p = self.queue[0]
+                if not self.pool.can_admit(len(p) + max_new):
+                    break
+                self.queue.popleft()
+                self.pool.reserve(slot, len(p) + max_new)
+                take.append((slot, rid, p))
+            else:
+                take.append((slot, *self.queue.popleft()))
         if not take:
             return
         b = self.cfg.batch
@@ -126,12 +177,14 @@ class ContinuousBatcher:
             join_mask[slot] = True
             prompts[slot, :len(p)] = p
             plens[slot] = len(p)
+        join_args = (self.params, self.caches, self.tok, self.lengths,
+                     self.done, self.remaining, jnp.asarray(join_mask),
+                     jnp.asarray(prompts), jnp.asarray(plens),
+                     jnp.full((b,), max_new, jnp.int32), self.key)
+        if self.pool is not None:
+            join_args += (jnp.asarray(self.pool.table),)
         (self.caches, self.tok, self.lengths, self.done, self.remaining,
-         self.key, first) = self._join(
-            self.params, self.caches, self.tok, self.lengths, self.done,
-            self.remaining, jnp.asarray(join_mask), jnp.asarray(prompts),
-            jnp.asarray(plens),
-            jnp.full((b,), max_new, jnp.int32), self.key)
+         self.key, first) = self._join(*join_args)
         first = np.asarray(first)
         for slot, rid, p in take:
             out = [int(first[slot])]
@@ -140,6 +193,8 @@ class ContinuousBatcher:
             if (self.eos is not None and out[0] == self.eos) or max_new <= 1:
                 self.results[rid] = out           # retired at birth
                 self.slot_rid[slot] = None
+                if self.pool is not None:
+                    self.pool.release(slot)
             else:
                 self.slot_rid[slot] = rid
                 self.slot_budget[slot] = max_new
@@ -163,6 +218,10 @@ class ContinuousBatcher:
                         or len(out) >= self.slot_budget[i]):
                     self.results[rid] = out
                     self.slot_rid[i] = None
+                    if self.pool is not None:
+                        # exact reclamation: every page the request held
+                        # goes back to the free list at this segment edge
+                        self.pool.release(i)
                     break
             if appended == 0 and self.slot_rid[i] is not None:
                 raise RuntimeError(
@@ -186,19 +245,64 @@ class ContinuousBatcher:
                 raise ValueError(
                     f"request {rid}: prompt {len(prompt)} + max_new "
                     f"{max_new} exceeds max_len {self.cfg.max_len}")
+            if (self.pool is not None
+                    and self.pool.pages_for(len(prompt) + max_new)
+                    > min(self.pool.n_pages, self.pool.max_pages)):
+                raise ValueError(
+                    f"request {rid}: needs "
+                    f"{self.pool.pages_for(len(prompt) + max_new)} pages, "
+                    f"pool holds {self.pool.n_pages} "
+                    f"(max {self.pool.max_pages}/slot)")
         while self.queue or any(r is not None for r in self.slot_rid):
             self._refill(max_new)
             if all(r is None for r in self.slot_rid):
                 if self.queue:
                     continue
                 break
-            loop = self._loop(steps, self._kv_cap(steps))
-            ((self.tok, self.caches, self.lengths, self.done,
-              self.remaining, self.key), emitted) = loop(
-                self.params, self.tok, self.caches, self.lengths,
-                self.done, self.remaining, self.key)
+            self._sample_kv()
+            if self.pool is not None:
+                cap = self._page_cap()
+                loop = self._loop(steps, cap)
+                pages = jnp.asarray(self.pool.table[:, :cap])
+                ((self.tok, self.caches, self.lengths, self.done,
+                  self.remaining, self.key), emitted) = loop(
+                    self.params, self.tok, self.caches, self.lengths,
+                    self.done, self.remaining, self.key, pages)
+            else:
+                loop = self._loop(steps, self._kv_cap(steps))
+                ((self.tok, self.caches, self.lengths, self.done,
+                  self.remaining, self.key), emitted) = loop(
+                    self.params, self.tok, self.caches, self.lengths,
+                    self.done, self.remaining, self.key)
             self._collect(np.asarray(emitted))
         return self.results
+
+    # ------------------------------------------------------------------
+    # KV memory accounting
+    # ------------------------------------------------------------------
+    def _sample_kv(self) -> None:
+        """Record (live tokens, allocated token capacity, live slots) at a
+        segment boundary.  Dense allocates ``batch * max_len`` whether or
+        not slots are live; paged allocates only the mapped pages."""
+        live = [i for i, r in enumerate(self.slot_rid) if r is not None]
+        live_tokens = sum(self.slot_len[i] for i in live)
+        if self.pool is not None:
+            alloc = self.pool.used_pages * self.pool.page_size
+        else:
+            alloc = self.cfg.batch * self.cfg.max_len
+        self.kv_samples.append((live_tokens, alloc, len(live)))
+
+    def kv_utilization(self) -> dict:
+        """Aggregate the per-segment samples: mean/peak KV utilization
+        (live tokens / allocated token capacity) and peak concurrency."""
+        if not self.kv_samples:
+            return {"mean_util": 0.0, "peak_util": 0.0,
+                    "peak_live_slots": 0, "samples": 0}
+        utils = [lt / cap for lt, cap, _ in self.kv_samples if cap]
+        return {"mean_util": sum(utils) / max(1, len(utils)),
+                "peak_util": max(utils, default=0.0),
+                "peak_live_slots": max(s for _, _, s in self.kv_samples),
+                "samples": len(self.kv_samples)}
 
 
 # the public serving entry point: the slot scheduler *is* the batcher

@@ -1,0 +1,95 @@
+"""Paged decode-attention kernel vs oracle: permuted page tables, partial
+last pages, sentinel (unallocated) tail entries, GQA/MQA head layouts."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.paged_attn import (gather_pages, paged_attn,
+                                      paged_attn_ref, paged_attn_xla)
+
+
+def _mk(rng, b, hq, hkv, d, n, ps, p_max, lengths, dtype=jnp.float32):
+    q = jnp.asarray(rng.standard_normal((b, hq, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((n, ps, hkv, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((n, ps, hkv, d)), dtype)
+    # each slot maps ceil(len/ps) random distinct pages; the tail of each
+    # row is the pool's sentinel id (== n)
+    tbl = np.full((b, p_max), n, np.int32)
+    perm = list(rng.permutation(n))
+    for i, ln in enumerate(lengths):
+        need = -(-ln // ps)
+        assert need <= p_max and len(perm) >= need, "test sizing bug"
+        for j in range(need):
+            tbl[i, j] = perm.pop()
+    return q, k, v, jnp.asarray(tbl), jnp.asarray(lengths, jnp.int32)
+
+
+@pytest.mark.parametrize("b,hq,hkv,d", [
+    (2, 8, 2, 32),    # GQA 4:1
+    (1, 4, 4, 64),    # MHA
+    (2, 8, 1, 64),    # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attn_sweep(b, hq, hkv, d, dtype):
+    rng = np.random.default_rng(hq * d)
+    n, ps, p_max = 24, 8, 8
+    lengths = [int(rng.integers(1, p_max * ps)) for _ in range(b)]
+    q, k, v, tbl, ln = _mk(rng, b, hq, hkv, d, n, ps, p_max, lengths, dtype)
+    out = paged_attn(q, k, v, tbl, ln)
+    ref = paged_attn_ref(q, k, v, tbl, ln)
+    tol = 3e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("ln", [1, 7, 8, 9, 63, 64])
+def test_paged_attn_page_boundaries(ln):
+    """Length masking at page boundaries (partial last page, exact fill,
+    one-token slot)."""
+    rng = np.random.default_rng(ln)
+    q, k, v, tbl, lns = _mk(rng, 1, 4, 2, 32, 16, 8, 8, [ln])
+    out = paged_attn(q, k, v, tbl, lns)
+    ref = paged_attn_ref(q, k, v, tbl, lns)
+    np.testing.assert_allclose(out, ref, rtol=3e-4, atol=3e-4)
+
+
+def test_paged_attn_matches_dense_decode_attn():
+    """A paged cache whose table is the identity permutation is exactly a
+    dense cache: paged_attn == decode_attn == dense oracle."""
+    from repro.kernels.decode_attn import decode_attn
+    rng = np.random.default_rng(0)
+    b, hq, hkv, d, ps, p_max = 3, 8, 2, 32, 8, 6
+    n = b * p_max
+    lengths = [5, 33, 48]
+    q = jnp.asarray(rng.standard_normal((b, hq, d)), jnp.float32)
+    kd = jnp.asarray(rng.standard_normal((b, p_max * ps, hkv, d)),
+                     jnp.float32)
+    vd = jnp.asarray(rng.standard_normal((b, p_max * ps, hkv, d)),
+                     jnp.float32)
+    # identity layout: slot i's pages are i*p_max .. i*p_max+p_max-1
+    kp = kd.reshape(n, ps, hkv, d)
+    vp = vd.reshape(n, ps, hkv, d)
+    tbl = jnp.arange(n, dtype=jnp.int32).reshape(b, p_max)
+    ln = jnp.asarray(lengths, jnp.int32)
+    paged = paged_attn(q, kp, vp, tbl, ln)
+    dense = decode_attn(q, kd, vd, ln, bs=ps)
+    np.testing.assert_allclose(paged, dense, rtol=3e-4, atol=3e-4)
+
+
+def test_gather_pages_layout():
+    """gather_pages reassembles table order and clamps sentinels."""
+    pool = jnp.arange(4 * 2 * 1 * 1, dtype=jnp.float32).reshape(4, 2, 1, 1)
+    tbl = jnp.asarray([[2, 0, 4]], jnp.int32)      # 4 == sentinel, clamps
+    out = gather_pages(pool, tbl)
+    assert out.shape == (1, 6, 1, 1)
+    got = np.asarray(out)[0, :, 0, 0]
+    np.testing.assert_array_equal(got[:4], [4.0, 5.0, 0.0, 1.0])
+
+
+def test_paged_attn_xla_matches_kernel():
+    rng = np.random.default_rng(9)
+    q, k, v, tbl, ln = _mk(rng, 2, 4, 2, 32, 12, 8, 4, [9, 25])
+    out_k = paged_attn(q, k, v, tbl, ln)
+    out_x = paged_attn_xla(q, k, v, tbl, ln)
+    np.testing.assert_allclose(out_k, out_x, rtol=3e-4, atol=3e-4)

@@ -1,0 +1,149 @@
+"""Block-pool allocator invariants: exact free-page accounting, no double
+free, page-table/cache-length consistency — unit tests always, randomized
+admit/retire/refill sequences when hypothesis is installed."""
+import numpy as np
+import pytest
+
+from repro.serve.kvpool import KVPool, PageError
+
+
+# --------------------------------------------------------------------------
+# plain unit tests (no optional deps)
+# --------------------------------------------------------------------------
+
+def test_reserve_release_roundtrip():
+    pool = KVPool(n_pages=8, page_size=4, slots=2)
+    pages = pool.reserve(0, 10)          # ceil(10/4) = 3 pages
+    assert len(pages) == 3
+    assert pool.free_pages == 5
+    assert list(pool.table[0, :3]) == pages
+    assert (pool.table[0, 3:] == pool.sentinel).all()
+    pool.check()
+    assert pool.release(0) == 3
+    assert pool.free_pages == 8
+    assert (pool.table[0] == pool.sentinel).all()
+    pool.check()
+
+
+def test_release_empty_slot_is_noop():
+    pool = KVPool(n_pages=4, page_size=2, slots=2)
+    assert pool.release(1) == 0
+    assert pool.free_pages == 4
+
+
+def test_exhaustion_and_admission():
+    pool = KVPool(n_pages=4, page_size=2, slots=4)
+    assert pool.can_admit(8) and not pool.can_admit(9)
+    pool.reserve(0, 6)                   # 3 pages
+    assert pool.can_admit(2) and not pool.can_admit(3)
+    with pytest.raises(PageError):
+        pool.reserve(1, 4)               # needs 2, only 1 free
+    pool.release(0)
+    pool.reserve(1, 8)                   # all 4 pages
+    assert pool.free_pages == 0
+
+
+def test_double_reserve_same_slot_rejected():
+    pool = KVPool(n_pages=4, page_size=2, slots=2)
+    pool.reserve(0, 2)
+    with pytest.raises(PageError, match="already holds"):
+        pool.reserve(0, 2)
+
+
+def test_max_pages_bounds_one_slot():
+    pool = KVPool(n_pages=16, page_size=2, slots=2, max_pages=4)
+    with pytest.raises(PageError, match="max_pages"):
+        pool.reserve(0, 9)               # 5 pages > max_pages 4
+    assert not pool.can_admit(9)
+    assert pool.can_admit(8)
+
+
+def test_refcount_guards_double_free():
+    pool = KVPool(n_pages=4, page_size=2, slots=2)
+    pool.reserve(0, 4)
+    # simulate corruption: a second slot aliasing the pages without refs
+    pool._slot_pages[1] = list(pool._slot_pages[0])
+    pool.table[1, :2] = pool.table[0, :2]
+    pool.release(0)
+    with pytest.raises(PageError, match="double free"):
+        pool.release(1)
+
+
+def test_utilization():
+    pool = KVPool(n_pages=8, page_size=4, slots=2)
+    assert pool.utilization(0) == 0.0
+    pool.reserve(0, 10)                  # 3 pages = 12-token capacity
+    assert pool.utilization(10) == pytest.approx(10 / 12)
+
+
+# --------------------------------------------------------------------------
+# property tests (optional dep — only these skip when hypothesis is absent,
+# the unit tests above always run)
+# --------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+    def _identity_deco(*a, **kw):
+        return lambda f: f
+    given = settings = _identity_deco
+
+    class st:  # noqa: N801 - stand-in so strategy expressions still parse
+        data = integers = booleans = sampled_from = staticmethod(
+            lambda *a, **kw: None)
+
+
+@pytest.mark.skipif(not _HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_random_admit_retire_sequences(data):
+    """Random admit/retire/refill traffic never double-frees, always
+    accounts pages exactly, and keeps every table row consistent with its
+    slot's reservation (the device-side cache_len bound)."""
+    n_pages = data.draw(st.integers(2, 24), label="n_pages")
+    page_size = data.draw(st.integers(1, 8), label="page_size")
+    slots = data.draw(st.integers(1, 6), label="slots")
+    pool = KVPool(n_pages, page_size, slots)
+    held: dict[int, int] = {}            # slot -> tokens reserved
+    for _ in range(data.draw(st.integers(1, 40), label="ops")):
+        if held and data.draw(st.booleans(), label="retire?"):
+            slot = data.draw(st.sampled_from(sorted(held)), label="slot_r")
+            tokens = held.pop(slot)
+            assert pool.release(slot) == pool.pages_for(tokens)
+        else:
+            free_slots = [s for s in range(slots) if s not in held]
+            if not free_slots:
+                continue
+            slot = data.draw(st.sampled_from(free_slots), label="slot_a")
+            tokens = data.draw(st.integers(1, n_pages * page_size),
+                               label="tokens")
+            if pool.can_admit(tokens):
+                pages = pool.reserve(slot, tokens)
+                assert len(pages) == pool.pages_for(tokens)
+                held[slot] = tokens
+            else:
+                with pytest.raises(PageError):
+                    pool.reserve(slot, tokens)
+        # exact accounting after every op
+        mapped = sum(pool.pages_for(t) for t in held.values())
+        assert pool.free_pages == n_pages - mapped
+        assert pool.used_pages == mapped
+        assert int(pool.refcount.sum()) == mapped
+        pool.check()
+        # table/cache_len consistency: every position a slot's tokens can
+        # reach maps to a real page; everything past it is sentinel
+        for slot, tokens in held.items():
+            need = pool.pages_for(tokens)
+            row = pool.table[slot]
+            assert (row[:need] < n_pages).all()
+            assert (row[need:] == pool.sentinel).all()
+            assert len(set(row[:need])) == need      # no aliased pages
+    # drain: everything comes back exactly once
+    for slot in list(held):
+        pool.release(slot)
+    assert pool.free_pages == n_pages
+    assert int(pool.refcount.sum()) == 0
+    assert (np.asarray(pool.table) == pool.sentinel).all()
