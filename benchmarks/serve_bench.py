@@ -1,5 +1,5 @@
 """Serving throughput + KV memory accounting: seed per-token host loop vs
-device-resident engine, dense vs paged KV cache.
+device-resident engine, dense vs paged KV cache, prefix cache on vs off.
 
 The seed ``Batcher`` ran decode as a per-token Python loop — eager
 dispatch, host argmax, a fresh padded batch per round, O(n^2) queue drain.
@@ -9,21 +9,34 @@ the per-slot ``max_len`` KV stripes with a block pool (repro.serve.kvpool)
 so admission is on free pages and retired slots return memory.  Every row
 therefore reports KV utilization (live tokens / allocated token capacity)
 next to tokens/sec — the dense layout's stranded-stripe waste is the
-number the paged pool exists to fix.
+number the paged pool exists to fix.  ``--prefix-cache`` runs a
+repeated-system-prompt workload through the shared-prefix radix cache
+(repro.serve.prefixcache) and reports the token hit rate plus prefill
+tokens computed vs skipped.
 
   PYTHONPATH=src python benchmarks/serve_bench.py [--smoke] [--paged]
+                                                  [--prefix-cache]
                                                   [--arch A]
 
 ``--smoke`` is the CI sanity mode (~5 s): engine only, asserts a nonzero
 throughput (with ``--paged``: the paged engine, plus 100% page
-reclamation).  The full mode asserts the engine beats the seed loop >= 3x
-and that at equal KV memory the paged pool either admits more concurrent
-requests than dense or matches dense throughput within 10% while
-reclaiming every retired slot's pages.
+reclamation; with ``--prefix-cache``: additionally a nonzero prefix hit
+rate on the shared-prompt workload).  The full mode asserts the engine
+beats the seed loop >= 3x, that at equal KV memory the paged pool either
+admits more concurrent requests than dense or matches dense throughput
+within 10% while reclaiming every retired slot's pages, and that the
+prefix cache cuts prefill tokens computed by exactly its hit rate without
+losing concurrency.
+
+Every invocation also appends its rows to ``BENCH_serve.json`` at the
+repo root — the machine-readable perf trajectory future PRs regress
+against (tokens/sec, KV utilization, prefix hit rate, prefill tokens
+computed vs skipped).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
@@ -41,11 +54,66 @@ from repro.serve.engine import ServeConfig        # noqa: E402
 from repro.serve.scheduler import Batcher         # noqa: E402
 
 
+BENCH_JSON = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), os.pardir, "BENCH_serve.json"))
+
+
+def write_bench_json(rows: dict, path: str = BENCH_JSON) -> None:
+    """Merge ``rows`` into the machine-readable perf trajectory.  Keys are
+    stable row names (e.g. ``smoke-paged+prefix``) so successive PRs
+    overwrite their own mode's numbers and diffs stay meaningful; the
+    backend is stamped per row, so rows retained from a run on different
+    hardware keep their provenance."""
+    data: dict = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, ValueError):
+            data = {}
+    data["schema"] = 1
+    data.setdefault("rows", {}).update(
+        {k: dict({m: (round(v, 4) if isinstance(v, float) else v)
+                  for m, v in row.items()},
+                 backend=jax.default_backend())
+         for k, row in rows.items()})
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, path)
+
+
+def full_bench_rows(r: dict, capacity: dict, prefix: dict) -> dict:
+    """The full-mode trajectory rows, assembled once for both entry
+    points (CLI main and the benchmarks.run table hook)."""
+    return {
+        "full-dense": {k: r[k] for k in
+                       ("engine_tok_s", "seed_tok_s", "speedup",
+                        "kv_util_mean", "peak_live_slots")},
+        "full-capacity-paged": capacity["paged"],
+        "full-capacity-dense": capacity["dense"],
+        "full-prefix-on": prefix["cache-on"],
+        "full-prefix-off": prefix["cache-off"],
+    }
+
+
 def make_requests(vocab: int, n: int, seed: int = 0):
     rng = np.random.default_rng(seed)
     return [(rid, rng.integers(0, vocab,
                                size=int(rng.integers(4, 12))).tolist())
             for rid in range(n)]
+
+
+def make_shared_requests(vocab: int, n: int, prefix_len: int, seed: int = 0):
+    """Repeated-system-prompt workload: every request carries the same
+    ``prefix_len``-token system prefix plus a short random tail — the
+    traffic shape the prefix cache exists for."""
+    rng = np.random.default_rng(seed)
+    system = rng.integers(0, vocab, size=prefix_len).tolist()
+    return [(rid, system + rng.integers(
+        0, vocab, size=int(rng.integers(2, 8))).tolist())
+        for rid in range(n)]
 
 
 def seed_batcher_run(model, params, cfg: ServeConfig, requests, max_new):
@@ -88,14 +156,21 @@ def engine_run(model, params, cfg: ServeConfig, requests, max_new):
 def bench(arch: str = "qwen2-0.5b", *, batch: int = 4, requests: int = 12,
           max_new: int = 24, max_len: int = 96, sync_every: int = 8,
           smoke: bool = False, paged: bool = False, page_size: int = 16,
-          total_pages: int | None = None, seed: int = 0) -> dict:
+          total_pages: int | None = None, prefix_cache: bool = False,
+          shared_prefix: int = 0, seed: int = 0) -> dict:
     cfg = get_config(arch).reduced()
     model = Model(cfg)
     params = pm.unwrap(model.init(jax.random.key(seed)))
     scfg = ServeConfig(max_len=max_len, batch=batch, sync_every=sync_every,
                        paged=paged, page_size=page_size,
-                       total_pages=total_pages)
-    reqs = make_requests(cfg.vocab, requests, seed)
+                       total_pages=total_pages, prefix_cache=prefix_cache)
+    if prefix_cache and not shared_prefix:
+        shared_prefix = 2 * page_size      # two full shareable pages
+    if shared_prefix:
+        reqs = make_shared_requests(cfg.vocab, requests, shared_prefix,
+                                    seed)
+    else:
+        reqs = make_requests(cfg.vocab, requests, seed)
 
     # engine: one warmup drain compiles the join/segment executables; the
     # timed drain is the steady serving state (same shapes, zero retraces).
@@ -107,14 +182,24 @@ def bench(arch: str = "qwen2-0.5b", *, batch: int = 4, requests: int = 12,
     dt_engine = time.perf_counter() - t0
     toks = sum(len(v) for v in got.values())
     util = batcher.kv_utilization()
+    pstats = batcher.prefix_stats()
     out = {"arch": arch, "tokens": toks, "paged": paged,
+           "prefix_cache": prefix_cache,
            "engine_tok_s": toks / dt_engine, "engine_s": dt_engine,
            "kv_util_mean": util["mean_util"],
            "kv_util_peak": util["peak_util"],
-           "peak_live_slots": util["peak_live_slots"]}
+           "peak_live_slots": util["peak_live_slots"],
+           "prefix_hit_rate": pstats["hit_rate"],
+           "prefill_computed": pstats["prefill_computed"],
+           "prefill_skipped": pstats["prefill_skipped"]}
     if paged:
-        out["pages_reclaimed"] = (batcher.pool.free_pages
-                                  == batcher.pool.n_pages)
+        # a drained pool holds no mapped pages: everything is back on the
+        # free list except prefix pages parked evictable-cached (zero
+        # reserved cost — reclaimed on pressure)
+        out["pages_reclaimed"] = (
+            batcher.pool.free_pages + batcher.pool.cached_pages
+            == batcher.pool.n_pages
+            and int(batcher.pool.refcount.sum()) == 0)
 
     if not smoke:
         t0 = time.perf_counter()
@@ -162,8 +247,49 @@ def capacity_compare(arch: str = "qwen2-0.5b", *, requests: int = 16,
     return res
 
 
+def prefix_compare(arch: str = "qwen2-0.5b", *, requests: int = 12,
+                   max_new: int = 16, max_len: int = 96,
+                   page_size: int = 8, prefix_len: int = 32,
+                   seed: int = 0) -> dict:
+    """Prefix cache on vs off at equal pool size on a repeated-system-
+    prompt workload.  On a hit, admission needs free pages only for the
+    suffix + budget — the shared prefix pages are already resident — so
+    the same pool admits more concurrent requests, and the join prefills
+    proportionally fewer tokens (computed drops by exactly the hit
+    tokens)."""
+    cfg = get_config(arch).reduced()
+    model = Model(cfg)
+    params = pm.unwrap(model.init(jax.random.key(seed)))
+    reqs = make_shared_requests(cfg.vocab, requests, prefix_len, seed)
+    # pool sized so cache-off fits ~2 whole requests but the shared-prefix
+    # path fits several more (prefix pages counted once, not per request)
+    pages_per_req = -(-(prefix_len + 8 + max_new) // page_size)
+    pool_pages = 2 * pages_per_req + 2
+    base = dict(max_len=max_len, batch=8, sync_every=8, paged=True,
+                page_size=page_size, total_pages=pool_pages)
+
+    res = {}
+    for name, on in (("cache-off", False), ("cache-on", True)):
+        scfg = ServeConfig(**base, prefix_cache=on)
+        engine_run(model, params, scfg, reqs, max_new)      # warmup
+        t0 = time.perf_counter()
+        got, b = engine_run(model, params, scfg, reqs, max_new)
+        dt = time.perf_counter() - t0
+        toks = sum(len(v) for v in got.values())
+        util = b.kv_utilization()
+        p = b.prefix_stats()
+        res[name] = {"tok_s": toks / dt, "s": dt,
+                     "kv_util_mean": util["mean_util"],
+                     "peak_live_slots": util["peak_live_slots"],
+                     "prefix_hit_rate": p["hit_rate"],
+                     "prefill_computed": p["prefill_computed"],
+                     "prefill_skipped": p["prefill_skipped"]}
+    return res
+
+
 def run(table) -> None:
-    """Hook for benchmarks.run: engine-vs-seed plus dense-vs-paged rows."""
+    """Hook for benchmarks.run: engine-vs-seed, dense-vs-paged and
+    prefix-cache rows; also refreshes BENCH_serve.json."""
     r = bench(requests=8, max_new=16, batch=4)
     table.add("serve seed per-token loop", r["seed_s"] * 1e9,
               f"{r['seed_tok_s']:.1f} tok/s")
@@ -178,6 +304,16 @@ def run(table) -> None:
               f"{c['dense']['peak_live_slots']} dense, "
               f"KV util {c['paged']['kv_util_mean']:.0%} vs "
               f"{c['dense']['kv_util_mean']:.0%}")
+    p = prefix_compare(requests=12, max_new=16)
+    on, off = p["cache-on"], p["cache-off"]
+    table.add("serve prefix cache (shared prompt)",
+              on["s"] * 1e9,
+              f"{on['tok_s']:.1f} tok/s, hit rate "
+              f"{on['prefix_hit_rate']:.0%}, prefill "
+              f"{on['prefill_computed']} vs {off['prefill_computed']} "
+              f"tokens, {on['peak_live_slots']} vs "
+              f"{off['peak_live_slots']} live slots")
+    write_bench_json(full_bench_rows(r, c, p))
 
 
 def main() -> None:
@@ -191,27 +327,47 @@ def main() -> None:
     ap.add_argument("--paged", action="store_true",
                     help="serve through the paged KV-cache block pool")
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="shared-prefix radix cache (needs --paged); runs "
+                         "a repeated-system-prompt workload and reports "
+                         "hit rate + prefill tokens computed vs skipped")
     ap.add_argument("--smoke", action="store_true",
                     help="CI sanity: engine only, tiny sizes, ~5s")
     args = ap.parse_args()
+    if args.prefix_cache and not args.paged:
+        ap.error("--prefix-cache requires --paged")
     if args.smoke:
-        r = bench(args.arch, batch=2, requests=3, max_new=4, max_len=32,
+        r = bench(args.arch, batch=2, requests=4, max_new=4, max_len=32,
                   sync_every=4, smoke=True, paged=args.paged,
-                  page_size=min(args.page_size, 8))
+                  page_size=min(args.page_size, 8),
+                  prefix_cache=args.prefix_cache)
         assert r["engine_tok_s"] > 0, r
         if args.paged:
             assert r["pages_reclaimed"], "retired pages were not reclaimed"
-        mode = "paged" if args.paged else "dense"
+        if args.prefix_cache:
+            assert r["prefix_hit_rate"] > 0, \
+                "shared-prompt workload produced no prefix-cache hits"
+            assert r["prefill_skipped"] > 0, r
+        mode = ("paged+prefix" if args.prefix_cache
+                else "paged" if args.paged else "dense")
+        write_bench_json({f"smoke-{mode}": {
+            "tok_s": r["engine_tok_s"], "tokens": r["tokens"],
+            "kv_util_mean": r["kv_util_mean"],
+            "prefix_hit_rate": r["prefix_hit_rate"],
+            "prefill_computed": r["prefill_computed"],
+            "prefill_skipped": r["prefill_skipped"]}})
         print(f"[serve_bench --smoke] {mode}: {r['tokens']} tokens, "
               f"{r['engine_tok_s']:.1f} tok/s, "
-              f"KV util {r['kv_util_mean']:.0%} "
+              f"KV util {r['kv_util_mean']:.0%}, "
+              f"prefix hit rate {r['prefix_hit_rate']:.0%} "
               f"on {jax.default_backend()}")
         return
     r = bench(args.arch, batch=args.batch, requests=args.requests,
               max_new=args.max_new, max_len=args.max_len,
               sync_every=args.sync_every, paged=args.paged,
-              page_size=args.page_size)
-    mode = "paged" if args.paged else "dense"
+              page_size=args.page_size, prefix_cache=args.prefix_cache)
+    mode = ("paged+prefix" if args.prefix_cache
+            else "paged" if args.paged else "dense")
     print(f"[serve_bench] arch={r['arch']} mode={mode} "
           f"tokens={r['tokens']} backend={jax.default_backend()}")
     print(f"  seed per-token loop : {r['seed_tok_s']:8.1f} tok/s "
@@ -238,6 +394,24 @@ def main() -> None:
     assert (p["peak_live_slots"] > d["peak_live_slots"]
             or (p["tok_s"] >= 0.9 * d["tok_s"] and p["pages_reclaimed"])), \
         "paged pool shows no capacity or throughput win over dense"
+
+    pc = prefix_compare(args.arch, max_new=args.max_new,
+                        max_len=args.max_len)
+    on, off = pc["cache-on"], pc["cache-off"]
+    total = off["prefill_computed"] + off["prefill_skipped"]
+    print(f"[prefix cache @ equal pool]  off: {off['tok_s']:.1f} tok/s, "
+          f"prefill {off['prefill_computed']} tokens, "
+          f"peak {off['peak_live_slots']} live slots")
+    print(f"                              on: {on['tok_s']:.1f} tok/s, "
+          f"prefill {on['prefill_computed']} tokens "
+          f"(hit rate {on['prefix_hit_rate']:.1%}), "
+          f"peak {on['peak_live_slots']} live slots")
+    assert on["prefill_skipped"] > 0, "shared-prompt workload never hit"
+    # computed drops by exactly the hit tokens: same total prompt work
+    assert on["prefill_computed"] + on["prefill_skipped"] == total, pc
+    assert on["peak_live_slots"] >= off["peak_live_slots"], \
+        "prefix sharing lost concurrency at equal pool size"
+    write_bench_json(full_bench_rows(r, c, pc))
 
 
 if __name__ == "__main__":

@@ -19,3 +19,8 @@ timeout 300 python benchmarks/serve_bench.py --smoke
 
 echo "== serving throughput smoke (paged KV cache) =="
 timeout 300 python benchmarks/serve_bench.py --paged --smoke
+
+echo "== serving smoke (paged + shared-prefix radix cache) =="
+# repeated-system-prompt workload; the smoke asserts a nonzero prefix
+# hit rate and that prefill tokens were actually skipped
+timeout 300 python benchmarks/serve_bench.py --paged --prefix-cache --smoke

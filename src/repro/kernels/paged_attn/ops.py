@@ -57,3 +57,25 @@ def paged_attn_xla(q: jnp.ndarray, k_pages: jnp.ndarray,
     k = gather_pages(k_pages, table)
     v = gather_pages(v_pages, table)
     return decode_attn_ref(q, k, v, lengths).astype(q.dtype)
+
+
+def paged_prefill_attn(q: jnp.ndarray, k_pages: jnp.ndarray,
+                       v_pages: jnp.ndarray, table: jnp.ndarray,
+                       q_offset: jnp.ndarray,
+                       kv_len: jnp.ndarray) -> jnp.ndarray:
+    """Prefill-attention through the page table: multi-token causal GQA
+    queries ``q`` [B, L, Hq, D] at per-slot depths ``q_offset`` [B] over
+    pooled pages, masked to each slot's ``kv_len``.
+
+    This is the suffix-only prefill path: a joining slot whose prompt
+    prefix is already resident (shared prefix pages mapped by the radix
+    cache) computes attention for *only its uncached suffix*, with the
+    gather reading the shared pages in place — the prefix KV is neither
+    recomputed nor restored.  Sentinel table entries clamp inside the
+    gather and are masked by ``kv_len``.  Prefill is compute-bound (not
+    the kernel's memory-bound decode regime) so the gather runs on XLA;
+    ``paged_attn`` stays the one-token Pallas path.
+    """
+    from .ref import paged_prefill_attn_ref
+    return paged_prefill_attn_ref(q, k_pages, v_pages, table,
+                                  q_offset, kv_len)

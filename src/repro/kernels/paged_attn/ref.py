@@ -1,4 +1,8 @@
-"""Oracle: one-token GQA attention gathered through a page table."""
+"""Oracle: GQA attention gathered through a page table — one-token decode
+and multi-token (suffix) prefill at per-slot depth offsets."""
+import math
+
+import jax
 import jax.numpy as jnp
 
 from ..decode_attn.ref import decode_attn_ref
@@ -23,3 +27,39 @@ def paged_attn_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
     k = gather_pages(k_pages, table)
     v = gather_pages(v_pages, table)
     return decode_attn_ref(q, k, v, lengths)
+
+
+def paged_prefill_attn_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
+                           v_pages: jnp.ndarray, table: jnp.ndarray,
+                           q_offset: jnp.ndarray,
+                           kv_len: jnp.ndarray) -> jnp.ndarray:
+    """Multi-token causal GQA attention through a page table: q [B, L, Hq,
+    D] are suffix queries sitting at per-slot depths ``q_offset`` [B] (the
+    cached-prefix lengths of a suffix-only prefill); slot b's query at
+    position ``q_offset[b] + t`` attends over its first
+    ``min(q_offset[b] + t + 1, kv_len[b])`` gathered tokens.
+
+    The math mirrors models.attention._dense_attn's vectorized branch
+    exactly (same einsum contractions, f32 score masking, weights cast
+    back to the query dtype) so routing a prefill through the pages is
+    bit-identical to the dense path the parity tests pin."""
+    b, lq, hq, d = q.shape
+    k = gather_pages(k_pages, table).astype(q.dtype)
+    v = gather_pages(v_pages, table).astype(q.dtype)
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, lq, hkv, g, d)
+    lk = k.shape[1]
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k) / math.sqrt(d)
+    scores = scores.astype(jnp.float32)
+    off = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32).reshape(-1),
+                           (b,))
+    kvl = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1), (b,))
+    kpos = jnp.arange(lk)
+    qpos = off[:, None, None] + jnp.arange(lq)[:, None]       # [B, Lq, 1]
+    mask = (kpos[None, None, :] <= qpos) \
+        & (kpos[None, None, :] < kvl[:, None, None])          # [B, Lq, Lk]
+    scores = jnp.where(mask[:, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v)
+    return out.reshape(b, lq, hq, v.shape[-1])

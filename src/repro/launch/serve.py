@@ -24,7 +24,8 @@ def run(arch: str, *, reduced: bool = True, requests: int = 4,
         seed: int = 0, sync_every: int = 8, temperature: float = 0.0,
         eos_id: int | None = None, attn_mode: str = "auto",
         paged: bool = False, page_size: int = 16,
-        total_pages: int | None = None) -> dict:
+        total_pages: int | None = None, prefix_cache: bool = False,
+        shared_prefix: int = 0, admission: str = "fifo") -> dict:
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -33,24 +34,32 @@ def run(arch: str, *, reduced: bool = True, requests: int = 4,
     scfg = ServeConfig(max_len=max_len, batch=batch, sync_every=sync_every,
                        temperature=temperature, attn_mode=attn_mode,
                        paged=paged, page_size=page_size,
-                       total_pages=total_pages)
+                       total_pages=total_pages, prefix_cache=prefix_cache,
+                       admission=admission)
     b = Batcher(model, params, scfg, eos_id=eos_id, seed=seed)
     rng = np.random.default_rng(seed)
+    system = rng.integers(0, cfg.vocab, size=shared_prefix).tolist()
     for rid in range(requests):
-        prompt = rng.integers(0, cfg.vocab,
-                              size=int(rng.integers(4, 12))).tolist()
+        prompt = system + rng.integers(0, cfg.vocab,
+                                       size=int(rng.integers(4, 12))).tolist()
         b.submit(rid, prompt)
     t0 = time.perf_counter()
     results = b.run(max_new=max_new)
     dt = time.perf_counter() - t0
     toks = sum(len(v) for v in results.values())
     util = b.kv_utilization()
+    pstats = b.prefix_stats()
     mode = (f"paged pool {b.pool.n_pages}x{b.pool.page_size}" if paged
             else "dense")
+    if prefix_cache:
+        mode += (f" + prefix cache (hit rate "
+                 f"{pstats['hit_rate']:.0%}, "
+                 f"{pstats['prefill_skipped']} prefill tokens skipped)")
     print(f"[serve] {len(results)} requests, {toks} tokens in {dt:.1f}s "
           f"({toks / dt:.1f} tok/s on {jax.default_backend()}, {mode}, "
           f"KV util {util['mean_util']:.0%})")
-    return {"results": results, "tok_per_s": toks / dt, "kv_util": util}
+    return {"results": results, "tok_per_s": toks / dt, "kv_util": util,
+            "prefix": pstats}
 
 
 def main() -> None:
@@ -71,12 +80,29 @@ def main() -> None:
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--total-pages", type=int, default=None,
                     help="pool size in pages (default: dense-equivalent)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="shared-prefix radix cache over the page pool "
+                         "(needs --paged): requests matching a cached "
+                         "page-aligned prompt prefix share its pages and "
+                         "prefill only their suffix; retired prefix pages "
+                         "stay resident (evictable, LRU) at zero reserved "
+                         "capacity")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many shared system-prompt tokens "
+                         "to every request (exercises --prefix-cache)")
+    ap.add_argument("--admission", default="fifo",
+                    choices=("fifo", "skip-ahead"),
+                    help="paged admission order: fifo blocks on the queue "
+                         "head; skip-ahead admits the first queued request "
+                         "whose pages fit (bounded lookahead)")
     args = ap.parse_args()
     run(args.arch, reduced=args.reduced, requests=args.requests,
         max_new=args.max_new, batch=args.batch, max_len=args.max_len,
         sync_every=args.sync_every, temperature=args.temperature,
         eos_id=args.eos_id, attn_mode=args.attn_mode, paged=args.paged,
-        page_size=args.page_size, total_pages=args.total_pages)
+        page_size=args.page_size, total_pages=args.total_pages,
+        prefix_cache=args.prefix_cache, shared_prefix=args.shared_prefix,
+        admission=args.admission)
 
 
 if __name__ == "__main__":

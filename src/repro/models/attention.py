@@ -180,6 +180,17 @@ def _paged_gather(pool: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
     return gather_pages(pool, table)
 
 
+def _paged_prefill_route(q, cache: "PagedKVCache", q_offset, kv_len):
+    """Route multi-token GQA queries over paged KV through the kernel
+    package's prefill path: each row's queries sit at its own depth
+    ``q_offset`` (0 for a fresh prompt; the cached-prefix length for a
+    suffix-only prefill, where the gather reads shared prefix pages in
+    place instead of recomputing them)."""
+    from ..kernels.paged_attn import paged_prefill_attn
+    return paged_prefill_attn(q, cache.k, cache.v, cache.table,
+                              q_offset, kv_len)
+
+
 def _paged_kernel_route(q, cache: "PagedKVCache", kv_len, dtype):
     """Route one-token GQA decode through the paged Pallas kernel.  The
     grid is the table width — the engine slices the table to its
@@ -274,10 +285,7 @@ def gqa_apply(params: dict, x: jnp.ndarray, cfg: ArchConfig, *,
         if x.shape[1] == 1 and not ctx_shard and pol.kernel_wanted():
             out = _paged_kernel_route(q, new_cache, kv_len, x.dtype)
         else:
-            kc = _paged_gather(kp, cache.table).astype(x.dtype)
-            vc = _paged_gather(vp, cache.table).astype(x.dtype)
-            out = attention_core(q, kc, vc, causal=True,
-                                 q_offset=cache.length, kv_len=kv_len)
+            out = _paged_prefill_route(q, new_cache, cache.length, kv_len)
     elif cache is not None and kv_override is None:
         kc = _cache_insert(cache.k, k, cache.length)
         vc = _cache_insert(cache.v, v, cache.length)

@@ -77,16 +77,27 @@ class Model:
         return logits, caches
 
     def prefill_paged(self, params, batch, caches, pages, *,
-                      dtype=jnp.bfloat16, last_pos=None):
+                      dtype=jnp.bfloat16, last_pos=None, cache_len=None):
         """Paged prefill: write the prompt's K/V through ``pages`` ([B, P]
         page table) into the pooled ``caches`` (from ``init_paged_caches``)
         instead of allocating per-slot stripes.  Rows whose table entries
         are all sentinels write nothing (their scatters drop) — that is how
         the serving join prefills only the slots being refilled while the
-        other slots' pages stay bit-for-bit intact."""
+        other slots' pages stay bit-for-bit intact.
+
+        ``cache_len`` ([B] int32, default zeros) makes this a *suffix*
+        prefill: row b's tokens are treated as sitting at positions
+        ``cache_len[b] + t`` — K/V scatters, RoPE and the causal mask all
+        continue at that depth, and attention reads the first
+        ``cache_len[b]`` resident tokens through the table.  The
+        prefix-cache join uses this to compute only the uncached tail of a
+        prompt whose page-aligned prefix is already pooled."""
         b = batch["tokens"].shape[0]
+        if cache_len is None:
+            cache_len = jnp.zeros((b,), jnp.int32)
         hidden, caches, _ = forward(params, batch, self.cfg, caches=caches,
-                                    cache_len=jnp.zeros((b,), jnp.int32),
+                                    cache_len=jnp.asarray(cache_len,
+                                                          jnp.int32),
                                     dtype=dtype, pages=pages)
         if last_pos is None:
             h = hidden[:, -1:]

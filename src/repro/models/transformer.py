@@ -140,7 +140,8 @@ def init_paged_caches(cfg: ArchConfig, batch: int, n_pages: int,
     pooled ``[layers, n_pages, page_size, ...]`` allocation shared by every
     slot through the page table (see repro.serve.kvpool); SSM segments keep
     their per-slot recurrent state — it is O(1) in sequence length, there
-    is nothing to page."""
+    is nothing to page (which is also why prefix sharing is
+    attention-only: a recurrent state cannot resume from a cached page)."""
     caches = []
     kshape, vshape = _attn_cache_shape(cfg, n_pages, page_size)
     for seg in cfg.resolved_segments():
@@ -272,6 +273,13 @@ def forward(params: dict, batch: dict, cfg: ArchConfig, *,
     ``pages`` ([B, P] int32): attention caches are the paged pools from
     :func:`init_paged_caches`, addressed through this per-slot page table
     (``cache_len`` must then be per-slot, [B] int32).
+
+    Multi-token calls at nonzero per-slot ``cache_len`` are the
+    suffix-only prefill (serve prefix cache): row b's L tokens sit at
+    absolute positions ``cache_len[b] + t`` — positions drive RoPE and
+    the causal mask, paged K/V scatters land past the resident prefix,
+    and attention gathers the prefix pages through the table instead of
+    recomputing them.
     """
     from ..distributed.act_sharding import constrain_btd
     tokens = batch["tokens"]

@@ -47,6 +47,16 @@ class ServeConfig:
     page_size: int = 16          # KV rows per page
     total_pages: int | None = None   # pool size; None -> batch * max pages
     #   (i.e. the same token capacity as the dense slot table)
+    # shared-prefix radix cache (repro.serve.prefixcache, needs paged):
+    # full prompt pages are registered in a radix tree, later requests map
+    # the matched pages via KVPool.share and prefill only their suffix
+    prefix_cache: bool = False
+    # admission policy: "fifo" keeps strict head-of-line order; the opt-in
+    # "skip-ahead" scans up to ``admission_lookahead`` queued requests for
+    # the first one whose pages fit when the head does not (higher slot
+    # occupancy under mixed prompt sizes, bounded reorder window)
+    admission: str = "fifo"
+    admission_lookahead: int = 8
 
     @property
     def max_pages(self) -> int:
@@ -229,29 +239,45 @@ def jit_join(model: Model, cfg: ServeConfig, *, eos_id: int | None):
 
 
 def make_paged_join(model: Model, cfg: ServeConfig, *, eos_id: int | None):
-    """Paged slot refill.  For *attention* segments there is nothing to
-    select afterwards: the batch prefill *writes through the page table*,
-    and rows outside ``join_mask`` get an all-sentinel table so their
-    scatters drop — occupied slots' pages stay bit-for-bit intact inside
-    one shared pooled allocation.  SSM segments have per-slot recurrent
-    state, not pages (init_paged_caches keeps them dense), so the prefill's
-    recompute of every row must still be masked back with the dense join's
-    batch-axis select — only joining rows take the fresh state.  ``pages``
-    is the full-width device page table; only its masked copy is handed to
-    the prefill."""
+    """Paged slot refill with a suffix-only prefill path.  For *attention*
+    segments there is nothing to select afterwards: the batch prefill
+    *writes through the page table*, and rows outside ``join_mask`` get an
+    all-sentinel table so their scatters drop — occupied slots' pages stay
+    bit-for-bit intact inside one shared pooled allocation.  SSM segments
+    have per-slot recurrent state, not pages (init_paged_caches keeps them
+    dense), so the prefill's recompute of every row must still be masked
+    back with the dense join's batch-axis select — only joining rows take
+    the fresh state.  ``pages`` is the full-width device page table; only
+    its masked copy is handed to the prefill.
+
+    Prefix sharing (repro.serve.prefixcache): ``prompts`` carries only
+    each joining row's *uncached suffix* and ``prefix_lens`` [B] its
+    cached-prefix depth (0 on a miss or with the cache off — then this is
+    exactly the PR 2 full prefill).  The prefill runs at
+    ``cache_len=prefix_lens``: suffix K/V scatters land at positions
+    ``prefix_len + t`` (page-aligned prefixes mean the shared pages sit
+    strictly below every write), RoPE continues at the absolute position,
+    and the suffix queries attend *over the already-resident prefix pages*
+    through the table gather — the prefix is neither recomputed nor
+    restored.  Rows hitting a shared prefix in the same join as the row
+    that first prefills it are still exact: per layer the pooled scatter
+    precedes the gather, so the writer row's pages are visible to every
+    reader row of the same call.
+    """
     from ..configs.base import BlockKind
     temp = cfg.temperature
     sentinel = cfg.pool_pages      # OOB page id (see kvpool.KVPool)
     seg_kinds = [s.kind for s in model.cfg.resolved_segments()]
 
     def join(params, caches, tok, lengths, done, remaining,
-             join_mask, prompts, plens, budgets, key, pages):
+             join_mask, prompts, plens, budgets, key, pages, prefix_lens):
         write_tbl = jnp.where(join_mask[:, None], pages, sentinel)
         with decode_attn_policy(mode=cfg.attn_mode,
                                 interpret=cfg.attn_interpret):
             logits, new_caches = model.prefill_paged(
                 params, {"tokens": prompts}, caches, write_tbl,
-                dtype=cfg.dtype, last_pos=plens - 1)
+                dtype=cfg.dtype, last_pos=plens - 1,
+                cache_len=prefix_lens)
 
         def select(new, old):
             # leaves are [layers, B, ...]: mask on the batch axis
@@ -270,7 +296,7 @@ def make_paged_join(model: Model, cfg: ServeConfig, *, eos_id: int | None):
             is_eos = first == eos_id
         rem_new = budgets - 1
         tok = jnp.where(join_mask[:, None], first[:, None], tok)
-        lengths = jnp.where(join_mask, plens, lengths)
+        lengths = jnp.where(join_mask, prefix_lens + plens, lengths)
         remaining = jnp.where(join_mask, rem_new, remaining)
         done = jnp.where(join_mask, is_eos | (rem_new <= 0), done)
         return caches, tok, lengths, done, remaining, key, first

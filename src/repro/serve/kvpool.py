@@ -16,11 +16,31 @@ This class is pure host bookkeeping — no jax.  The device sees only the
 ``table`` array ([slots, max_pages] int32, unallocated entries =
 ``sentinel`` = ``n_pages``, i.e. one past the pool so scatters through them
 drop); the scheduler uploads (a column-slice of) it around each decode
-segment.  ``refcount`` is carried per page and today is only ever 0/1 —
-it is the hook for prefix sharing (ROADMAP), where a shared prompt page
-would be mapped into several tables and freed on the last release.
+segment.
+
+Prefix-cache lifecycle (PR 3, :mod:`repro.serve.prefixcache`): a page is
+born on the free list, mapped into one slot by :meth:`reserve` /
+:meth:`extend` (refcount 1), and — if it holds a full, immutable page of
+prompt tokens — registered in the radix cache.  Later requests with the
+same prompt prefix map the *same* page via :meth:`share`, taking its
+refcount above 1; only full page-aligned prefix chunks are ever shared, so
+a shared page is never written again (the first partially-filled page of
+every prompt stays private — no copy-on-write).  When the last slot
+mapping a registered page retires, :meth:`release` parks it in the
+**evictable cached** state (refcount 0, not free, ``cacheable`` argument)
+instead of freeing it: the KV stays resident for future matches at zero
+reserved cost.  A new match revives it straight back to refcount 1
+(:meth:`share`), and pool pressure reclaims it (:meth:`reclaim`, driven
+LRU/leaf-first by the registered ``evictor``) — so
+
+    free -> mapped (1) -> shared (>1) -> cached (0, evictable) -> free
+                                     \\-> revived (1) -> ...
+
+and ``free + mapped + cached`` always partitions the pool exactly.
 """
 from __future__ import annotations
+
+from typing import Iterable
 
 import numpy as np
 
@@ -50,6 +70,10 @@ class KVPool:
         # LIFO free list: recently freed pages are re-used first (their
         # HBM is warm and the table stays dense at the low ids).
         self._free: list[int] = list(range(n_pages - 1, -1, -1))
+        # evictable cached pages: refcount 0 but their KV is still live
+        # prefix-cache content — reclaimed on pressure via ``evictor``
+        self._cached: set[int] = set()
+        self.evictor = None                # set by prefixcache.PrefixCache
         self.refcount = np.zeros((n_pages,), np.int32)
         self.table = np.full((slots, self.max_pages), self.sentinel,
                              np.int32)
@@ -67,20 +91,51 @@ class KVPool:
         return len(self._free)
 
     @property
-    def used_pages(self) -> int:
-        return self.n_pages - len(self._free)
+    def cached_pages(self) -> int:
+        """Pages in the evictable cached state (refcount 0, KV resident)."""
+        return len(self._cached)
 
-    def can_admit(self, tokens: int) -> bool:
-        """Would ``reserve`` for a ``tokens``-token request succeed?"""
-        n = self.pages_for(tokens)
-        return n <= min(len(self._free), self.max_pages)
+    @property
+    def used_pages(self) -> int:
+        """Pages mapped by live slots (cached pages are *not* used — they
+        cost nothing and are reclaimed on pressure)."""
+        return self.n_pages - len(self._free) - len(self._cached)
+
+    def cached_page_ids(self) -> list[int]:
+        return sorted(self._cached)
+
+    def is_cached(self, page: int) -> bool:
+        return page in self._cached
+
+    def can_admit(self, tokens: int,
+                  shared_pages: Iterable[int] = ()) -> bool:
+        """Would admitting a ``tokens``-token request succeed, given that
+        ``shared_pages`` of its prefix are already resident (mapped or
+        cached) and need no fresh allocation?  Cached pages count as
+        available — the evictor reclaims them on demand."""
+        shared = set(shared_pages)
+        total = self.pages_for(tokens)
+        if total > self.max_pages:
+            return False
+        avail = len(self._free) + len(self._cached - shared)
+        return total - len(shared) <= avail
 
     def slot_pages(self, slot: int) -> list[int]:
         return list(self._slot_pages[slot])
 
     # ------------------------------------------------------------------
-    # allocate / release
+    # allocate / share / release
     # ------------------------------------------------------------------
+    def _alloc(self, n: int) -> list[int]:
+        """Pop ``n`` pages off the free list, evicting cached pages first
+        when the list runs short (the prefix cache costs zero capacity)."""
+        if n > len(self._free) and self.evictor is not None:
+            self.evictor.evict(n - len(self._free))
+        if n > len(self._free):
+            raise PageError(
+                f"pool exhausted: need {n} pages, {len(self._free)} free")
+        return [self._free.pop() for _ in range(n)]
+
     def reserve(self, slot: int, tokens: int) -> list[int]:
         """Map pages for a ``tokens``-token request onto ``slot``.
 
@@ -91,27 +146,76 @@ class KVPool:
         """
         if self._slot_pages[slot]:
             raise PageError(f"slot {slot} already holds pages")
+        if tokens <= 0:
+            # a zero-page reservation would leave the slot indistinguishable
+            # from unreserved (a second reserve would "succeed") — reject it
+            raise PageError(
+                f"slot {slot}: zero-token reservation (tokens={tokens})")
         n = self.pages_for(tokens)
         if n > self.max_pages:
             raise PageError(
                 f"request needs {n} pages > max_pages {self.max_pages}")
-        if n > len(self._free):
-            raise PageError(
-                f"pool exhausted: need {n} pages, {len(self._free)} free")
-        pages = [self._free.pop() for _ in range(n)]
+        pages = self._alloc(n)
         for i, p in enumerate(pages):
             self.refcount[p] += 1
             self.table[slot, i] = p
         self._slot_pages[slot] = pages
         return pages
 
-    def release(self, slot: int) -> int:
-        """Return every page mapped by ``slot``; returns the count freed.
+    def share(self, slot: int, pages: list[int]) -> None:
+        """Map already-resident ``pages`` (a matched prefix chain, in
+        order) into empty ``slot``.  Mapped pages gain a reference
+        (refcount goes above 1 — several tables now name the same page);
+        cached pages are revived back to refcount 1.  Free pages cannot be
+        shared — their KV is gone."""
+        if self._slot_pages[slot]:
+            raise PageError(f"slot {slot} already holds pages")
+        if not pages:
+            raise PageError(f"slot {slot}: share of zero pages")
+        if len(pages) > self.max_pages:
+            raise PageError(
+                f"shared prefix {len(pages)} pages > max_pages "
+                f"{self.max_pages}")
+        if len(set(pages)) != len(pages):
+            raise PageError("shared prefix repeats a page")
+        for p in pages:
+            if self.refcount[p] == 0 and p not in self._cached:
+                raise PageError(f"page {p} is free, cannot share")
+        for i, p in enumerate(pages):
+            self._cached.discard(p)
+            self.refcount[p] += 1
+            self.table[slot, i] = p
+        self._slot_pages[slot] = list(pages)
 
-        Each page's refcount drops by one and the page re-enters the free
-        list only at zero (prefix sharing keeps shared pages alive).
-        Releasing an empty slot is a no-op — but a page leaving the table
-        twice is a hard error.
+    def extend(self, slot: int, n: int) -> list[int]:
+        """Append ``n`` fresh pages after ``slot``'s current mapping — the
+        private suffix + budget pages of a request whose prefix came from
+        :meth:`share`."""
+        if n <= 0:
+            raise PageError(f"slot {slot}: zero-page extend (n={n})")
+        held = self._slot_pages[slot]
+        if len(held) + n > self.max_pages:
+            raise PageError(
+                f"slot {slot}: {len(held)} + {n} pages > max_pages "
+                f"{self.max_pages}")
+        pages = self._alloc(n)
+        for i, p in enumerate(pages):
+            self.refcount[p] += 1
+            self.table[slot, len(held) + i] = p
+        held.extend(pages)
+        return pages
+
+    def release(self, slot: int,
+                cacheable: frozenset[int] | set[int] = frozenset()) -> int:
+        """Drop ``slot``'s reference on every page it maps; returns the
+        count returned to the free list.
+
+        A page re-enters circulation only at refcount zero (prefix sharing
+        keeps shared pages alive under their other tables).  Zero-refcount
+        pages in ``cacheable`` (i.e. with a live radix entry) park in the
+        evictable cached state instead of the free list — resident for
+        future matches, reclaimed on pressure.  Releasing an empty slot is
+        a no-op, but a page leaving the table twice is a hard error.
         """
         pages = self._slot_pages[slot]
         if not pages:
@@ -122,17 +226,31 @@ class KVPool:
                 raise PageError(f"double free of page {p} (slot {slot})")
             self.refcount[p] -= 1
             if self.refcount[p] == 0:
-                self._free.append(p)
-                freed += 1
+                if p in cacheable:
+                    self._cached.add(p)
+                else:
+                    self._free.append(p)
+                    freed += 1
         self._slot_pages[slot] = []
         self.table[slot, :] = self.sentinel
         return freed
+
+    def reclaim(self, page: int) -> None:
+        """Move an evictable cached page back to the free list (called by
+        the prefix cache's evictor once the radix entry is dropped)."""
+        if page not in self._cached:
+            raise PageError(f"reclaim of non-cached page {page}")
+        self._cached.discard(page)
+        self._free.append(page)
 
     # ------------------------------------------------------------------
     # invariants / metrics
     # ------------------------------------------------------------------
     def check(self) -> None:
-        """Assert global allocator consistency (used by the tests)."""
+        """Assert global allocator consistency (used by the tests):
+        free, mapped and cached pages partition the pool exactly, shared
+        pages' refcounts equal the number of tables naming them, and
+        cached pages carry no references."""
         counts: dict[int, int] = {}
         for pages in self._slot_pages:
             for p in pages:
@@ -146,8 +264,16 @@ class KVPool:
             raise PageError("free list contains duplicates")
         if free & counts.keys():
             raise PageError("a page is both free and mapped")
-        if len(free) + len(counts) != self.n_pages:
-            raise PageError("free list + mapped pages != pool")
+        if self._cached & free:
+            raise PageError("a page is both cached and free")
+        if self._cached & counts.keys():
+            raise PageError("a page is both cached and mapped")
+        for p in self._cached:
+            if self.refcount[p] != 0:
+                raise PageError(
+                    f"cached page {p} has refcount {self.refcount[p]}")
+        if len(free) + len(counts) + len(self._cached) != self.n_pages:
+            raise PageError("free + mapped + cached pages != pool")
         for slot, pages in enumerate(self._slot_pages):
             if list(self.table[slot, :len(pages)]) != pages:
                 raise PageError(f"table row {slot} out of sync")
@@ -155,6 +281,8 @@ class KVPool:
                 raise PageError(f"table row {slot} has stale tail entries")
 
     def utilization(self, live_tokens: int) -> float:
-        """live tokens / allocated token capacity (1.0 = no page waste)."""
+        """live tokens / token capacity mapped by live slots (1.0 = no
+        page waste; prefix sharing can push this *above* 1.0 — several
+        slots' live tokens counting one physical page)."""
         cap = self.used_pages * self.page_size
         return live_tokens / cap if cap else 0.0

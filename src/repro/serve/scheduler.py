@@ -44,6 +44,26 @@ bucketing becomes **page-count bucketing**: the device page table is
 sliced to a power-of-two bound on the deepest live slot's page count
 (same ``_pow2_bucket`` policy, so segments don't retrace), which prunes
 the paged-attention grid to live pages only.
+
+Prefix cache (``cfg.prefix_cache``, repro.serve.prefixcache, needs paged):
+admission first matches the prompt against a radix tree of page-aligned
+cached chunks; the matched pages are mapped into the joining slot via
+``KVPool.share`` (refcounts go above 1) and only the **uncached suffix**
+is prefetched into fresh pages and prefilled — hit-aware admission needs
+free pages for suffix + budget only.  Full prompt pages are registered
+after reservation (so queue-mates in the same refill round already hit),
+and retirement parks registered pages in the evictable cached state
+instead of freeing them — reclaimed LRU/leaf-first on pool pressure, so
+the cache reserves zero capacity.  Attention-only: hybrid SSM models are
+rejected (a recurrent state cannot resume from a cached page).
+
+Admission policy (``cfg.admission``): ``"fifo"`` (default) keeps strict
+head-of-line order — if the head's pages don't fit, nothing joins until a
+retirement frees them.  ``"skip-ahead"`` scans up to
+``cfg.admission_lookahead`` queued requests for the first admissible one
+when the head blocks: higher slot occupancy under mixed prompt sizes, at
+the cost of a bounded reorder window (per-slot lengths keep every
+request's tokens schedule-independent either way).
 """
 from __future__ import annotations
 
@@ -56,6 +76,7 @@ import numpy as np
 from .engine import (PAD_TOKEN, ServeConfig, jit_decode_loop, jit_join,
                      jit_paged_decode_loop, jit_paged_join)
 from .kvpool import KVPool
+from .prefixcache import PrefixCache
 from ..models.model_zoo import Model
 
 
@@ -80,6 +101,8 @@ class ContinuousBatcher:
         self.queue: collections.deque[tuple[int, list[int]]] = \
             collections.deque()
         self.results: dict[int, list[int]] = {}
+        if cfg.admission not in ("fifo", "skip-ahead"):
+            raise ValueError(f"unknown admission policy {cfg.admission!r}")
         b = cfg.batch
         if cfg.paged:
             self.pool = KVPool(cfg.pool_pages, cfg.page_size, b,
@@ -91,6 +114,24 @@ class ContinuousBatcher:
             self.pool = None
             self.caches = model.init_caches(b, cfg.max_len, cfg.dtype)
             self._join = jit_join(model, cfg, eos_id=eos_id)
+        self.prefix: PrefixCache | None = None
+        if cfg.prefix_cache:
+            from ..configs.base import BlockKind
+            if not cfg.paged:
+                raise ValueError("prefix_cache requires paged=True "
+                                 "(shared pages live in the block pool)")
+            if any(s.kind is BlockKind.SSM
+                   for s in model.cfg.resolved_segments()):
+                raise ValueError(
+                    "prefix_cache is attention-only: hybrid SSM models "
+                    "cannot resume a recurrent state from cached pages")
+            self.prefix = PrefixCache(self.pool)
+        # prefill accounting: tokens actually computed by joins vs skipped
+        # because their KV was already resident (prefix-cache hits)
+        self.prefill_computed = 0
+        self.prefill_skipped = 0
+        self.prefix_admits = 0
+        self.prefix_hits = 0
         self.tok = jnp.zeros((b, 1), jnp.int32)
         self.lengths = jnp.zeros((b,), jnp.int32)
         self.done = jnp.ones((b,), bool)
@@ -145,56 +186,117 @@ class ContinuousBatcher:
         return _pow2_bucket(max(live), lo=2, hi=self.cfg.max_pages)
 
     # ------------------------------------------------------------------
+    def _admit_next(self, slot: int, max_new: int):
+        """Pop and reserve the next admissible queued request for ``slot``.
+
+        Paged admission matches the prompt against the prefix cache first:
+        matched pages are mapped via ``KVPool.share`` and only suffix +
+        budget pages must be free (hit-aware admission).  FIFO blocks on
+        the queue head; ``skip-ahead`` scans a bounded lookahead window
+        for the first request whose pages fit.  Returns
+        ``(rid, prompt, matched_tokens)`` or None.
+        """
+        if not self.queue:
+            return None
+        if self.pool is None:
+            rid, p = self.queue.popleft()
+            return rid, p, 0
+        window = 1
+        if self.cfg.admission == "skip-ahead":
+            window = min(len(self.queue), self.cfg.admission_lookahead)
+        for qi in range(window):
+            rid, p = self.queue[qi]
+            matched: list[int] = []
+            mtoks = 0
+            if self.prefix is not None:
+                matched, mtoks = self.prefix.match(p)
+            if not self.pool.can_admit(len(p) + max_new,
+                                       shared_pages=matched):
+                continue
+            del self.queue[qi]
+            total = self.pool.pages_for(len(p) + max_new)
+            if matched:
+                # refcounts go above 1 here: the prefix chain is mapped
+                # into this slot's table on top of its other references
+                self.pool.share(slot, matched)
+                self.pool.extend(slot, total - len(matched))
+            else:
+                self.pool.reserve(slot, len(p) + max_new)
+            if self.prefix is not None:
+                # register the prompt's full pages now, so queue-mates in
+                # this same refill round already match them (their KV is
+                # written by the very join this admission feeds)
+                n_full = len(p) // self.pool.page_size
+                if n_full:
+                    self.prefix.insert(
+                        p[:n_full * self.pool.page_size],
+                        self.pool.slot_pages(slot)[:n_full])
+                self.prefix_admits += 1
+                self.prefix_hits += bool(mtoks)
+            return rid, p, mtoks
+        return None
+
+    def _release_slot(self, slot: int) -> None:
+        """Return ``slot``'s pages; registered prefix pages whose refcount
+        hits zero park in the evictable cached state, everything else goes
+        straight back to the free list."""
+        if self.pool is None:
+            return
+        cacheable = frozenset()
+        if self.prefix is not None:
+            cacheable = self.prefix.registered_pages(
+                self.pool.slot_pages(slot))
+        self.pool.release(slot, cacheable=cacheable)
+
+    # ------------------------------------------------------------------
     def _refill(self, max_new: int) -> None:
         free = [i for i, r in enumerate(self.slot_rid) if r is None]
         if not free or not self.queue:
             return
-        take: list[tuple[int, int, list[int]]] = []   # (slot, rid, prompt)
+        # (slot, rid, prompt, cached-prefix tokens)
+        take: list[tuple[int, int, list[int], int]] = []
         for slot in free:
-            if not self.queue:
+            cand = self._admit_next(slot, max_new)
+            if cand is None:
                 break
-            if self.pool is not None:
-                # paged admission: the pool must hold prompt + budget.
-                # Head-of-line blocking keeps FIFO order; retirements will
-                # free pages and re-admit at the next segment boundary.
-                rid, p = self.queue[0]
-                if not self.pool.can_admit(len(p) + max_new):
-                    break
-                self.queue.popleft()
-                self.pool.reserve(slot, len(p) + max_new)
-                take.append((slot, rid, p))
-            else:
-                take.append((slot, *self.queue.popleft()))
+            take.append((slot, *cand))
         if not take:
             return
         b = self.cfg.batch
-        width = _pow2_bucket(max(len(p) for _, _, p in take), lo=8,
+        # the join prefills only each row's uncached suffix, so the padded
+        # width (and the jit bucket) shrinks with the hit depth
+        width = _pow2_bucket(max(len(p) - m for _, _, p, m in take), lo=8,
                              hi=self.cfg.max_len)
         join_mask = np.zeros((b,), bool)
         prompts = np.zeros((b, width), np.int32)
         plens = np.ones((b,), np.int32)
-        for slot, _, p in take:
+        prefix_lens = np.zeros((b,), np.int32)
+        for slot, _, p, mtoks in take:
+            suffix = p[mtoks:]
             join_mask[slot] = True
-            prompts[slot, :len(p)] = p
-            plens[slot] = len(p)
+            prompts[slot, :len(suffix)] = suffix
+            plens[slot] = len(suffix)
+            prefix_lens[slot] = mtoks
+            self.prefill_computed += len(suffix)
+            self.prefill_skipped += mtoks
         join_args = (self.params, self.caches, self.tok, self.lengths,
                      self.done, self.remaining, jnp.asarray(join_mask),
                      jnp.asarray(prompts), jnp.asarray(plens),
                      jnp.full((b,), max_new, jnp.int32), self.key)
         if self.pool is not None:
-            join_args += (jnp.asarray(self.pool.table),)
+            join_args += (jnp.asarray(self.pool.table),
+                          jnp.asarray(prefix_lens))
         (self.caches, self.tok, self.lengths, self.done, self.remaining,
          self.key, first) = self._join(*join_args)
         first = np.asarray(first)
-        for slot, rid, p in take:
+        for slot, rid, p, _ in take:
             out = [int(first[slot])]
             self.outputs[rid] = out
             self.slot_len[slot] = len(p)
             if (self.eos is not None and out[0] == self.eos) or max_new <= 1:
                 self.results[rid] = out           # retired at birth
                 self.slot_rid[slot] = None
-                if self.pool is not None:
-                    self.pool.release(slot)
+                self._release_slot(slot)
             else:
                 self.slot_rid[slot] = rid
                 self.slot_budget[slot] = max_new
@@ -218,10 +320,10 @@ class ContinuousBatcher:
                         or len(out) >= self.slot_budget[i]):
                     self.results[rid] = out
                     self.slot_rid[i] = None
-                    if self.pool is not None:
-                        # exact reclamation: every page the request held
-                        # goes back to the free list at this segment edge
-                        self.pool.release(i)
+                    # exact reclamation at this segment edge: private
+                    # pages go back to the free list, registered prefix
+                    # pages park evictable-cached for future matches
+                    self._release_slot(i)
                     break
             if appended == 0 and self.slot_rid[i] is not None:
                 raise RuntimeError(
@@ -303,6 +405,25 @@ class ContinuousBatcher:
                 "peak_util": max(utils, default=0.0),
                 "peak_live_slots": max(s for _, _, s in self.kv_samples),
                 "samples": len(self.kv_samples)}
+
+    def prefix_stats(self) -> dict:
+        """Prefix-cache effectiveness: prefill tokens computed vs skipped
+        (token hit rate), request-level hits, and cache residency.  With
+        the cache off everything lands in ``prefill_computed`` and the
+        rates are zero, so the dict is reportable either way."""
+        total = self.prefill_computed + self.prefill_skipped
+        return {"enabled": self.prefix is not None,
+                "prefill_computed": self.prefill_computed,
+                "prefill_skipped": self.prefill_skipped,
+                "hit_rate": self.prefill_skipped / total if total else 0.0,
+                "admits": self.prefix_admits,
+                "hits": self.prefix_hits,
+                "cached_pages": (self.pool.cached_pages
+                                 if self.pool is not None else 0),
+                "radix_entries": (self.prefix.n_entries
+                                  if self.prefix is not None else 0),
+                "evicted_pages": (self.prefix.evicted_pages
+                                  if self.prefix is not None else 0)}
 
 
 # the public serving entry point: the slot scheduler *is* the batcher

@@ -50,6 +50,21 @@ def test_double_reserve_same_slot_rejected():
         pool.reserve(0, 2)
 
 
+def test_reserve_zero_tokens_rejected():
+    """A zero-token reservation used to map zero pages and leave the slot
+    indistinguishable from unreserved (a second reserve on it succeeded).
+    It is now a hard allocator error."""
+    pool = KVPool(n_pages=4, page_size=2, slots=2)
+    with pytest.raises(PageError, match="zero-token"):
+        pool.reserve(0, 0)
+    with pytest.raises(PageError, match="zero-token"):
+        pool.reserve(0, -3)
+    # the failed reserve left no trace: a real one still works
+    assert pool.free_pages == 4
+    pool.reserve(0, 2)
+    pool.check()
+
+
 def test_max_pages_bounds_one_slot():
     pool = KVPool(n_pages=16, page_size=2, slots=2, max_pages=4)
     with pytest.raises(PageError, match="max_pages"):
@@ -74,6 +89,106 @@ def test_utilization():
     assert pool.utilization(0) == 0.0
     pool.reserve(0, 10)                  # 3 pages = 12-token capacity
     assert pool.utilization(10) == pytest.approx(10 / 12)
+
+
+# --------------------------------------------------------------------------
+# prefix sharing: share / extend / evictable-cached lifecycle
+# --------------------------------------------------------------------------
+
+def test_share_takes_refcount_above_one():
+    pool = KVPool(n_pages=8, page_size=4, slots=3)
+    prefix = pool.reserve(0, 8)          # 2 pages
+    pool.share(1, prefix)
+    pool.extend(1, 2)
+    assert (pool.refcount[prefix] == 2).all()
+    assert pool.slot_pages(1)[:2] == prefix
+    assert pool.free_pages == 8 - 4      # 2 shared (counted once) + 2 new
+    pool.check()
+    # releasing one holder keeps the shared pages mapped for the other
+    pool.release(0)
+    assert (pool.refcount[prefix] == 1).all()
+    pool.check()
+
+
+def test_release_cacheable_parks_pages_evictable():
+    pool = KVPool(n_pages=6, page_size=4, slots=2)
+    pages = pool.reserve(0, 12)          # 3 pages
+    cacheable = frozenset(pages[:2])     # "registered" prefix pages
+    freed = pool.release(0, cacheable=cacheable)
+    assert freed == 1                    # only the private page is freed
+    assert pool.cached_pages == 2
+    assert pool.free_pages == 4
+    assert pool.used_pages == 0          # cached pages cost no capacity
+    assert int(pool.refcount.sum()) == 0
+    pool.check()
+    # revival: sharing a cached page maps it straight back (refcount 1)
+    pool.share(1, pages[:2])
+    assert pool.cached_pages == 0
+    assert (pool.refcount[pages[:2]] == 1).all()
+    pool.check()
+
+
+def test_reclaim_and_share_of_free_page_rejected():
+    pool = KVPool(n_pages=4, page_size=2, slots=2)
+    pages = pool.reserve(0, 4)
+    pool.release(0, cacheable=frozenset(pages))
+    pool.reclaim(pages[0])
+    assert pool.free_pages == 3 and pool.cached_pages == 1
+    with pytest.raises(PageError, match="non-cached"):
+        pool.reclaim(pages[0])           # already reclaimed
+    with pytest.raises(PageError, match="free"):
+        pool.share(1, [pages[0]])        # free pages' KV is gone
+    pool.check()
+
+
+def test_can_admit_counts_cached_and_shared_pages():
+    pool = KVPool(n_pages=4, page_size=2, slots=2)
+    pages = pool.reserve(0, 8)           # whole pool
+    pool.release(0, cacheable=frozenset(pages))
+    assert pool.free_pages == 0 and pool.cached_pages == 4
+    # cached pages are available capacity (evicted on demand) ...
+    assert pool.can_admit(8)
+    # ... and shared prefix pages need no fresh allocation at all
+    assert pool.can_admit(8, shared_pages=pages)
+    # but a matched prefix does not double-count as evictable capacity:
+    # 8 tokens need 4 pages, 2 shared -> 2 fresh, only 2 cached left
+    assert pool.can_admit(8, shared_pages=pages[:2])
+    assert not pool.can_admit(10, shared_pages=pages[:2])
+
+
+def test_alloc_pressure_calls_evictor():
+    class DropOldest:
+        def __init__(self, pool):
+            self.pool = pool
+            self.calls = 0
+
+        def evict(self, n):
+            self.calls += 1
+            for p in self.pool.cached_page_ids()[:n]:
+                self.pool.reclaim(p)
+
+    pool = KVPool(n_pages=4, page_size=2, slots=2)
+    pool.evictor = DropOldest(pool)
+    pages = pool.reserve(0, 8)
+    pool.release(0, cacheable=frozenset(pages))
+    assert pool.free_pages == 0
+    got = pool.reserve(1, 6)             # needs 3: all must come via evict
+    assert len(got) == 3
+    assert pool.evictor.calls == 1
+    assert pool.cached_pages == 1
+    pool.check()
+
+
+def test_extend_validates_bounds():
+    pool = KVPool(n_pages=8, page_size=2, slots=2, max_pages=3)
+    pool.reserve(0, 4)                   # 2 pages
+    with pytest.raises(PageError, match="zero-page"):
+        pool.extend(0, 0)
+    with pytest.raises(PageError, match="max_pages"):
+        pool.extend(0, 2)                # 2 + 2 > 3
+    pool.extend(0, 1)
+    assert len(pool.slot_pages(0)) == 3
+    pool.check()
 
 
 # --------------------------------------------------------------------------
@@ -147,3 +262,77 @@ def test_random_admit_retire_sequences(data):
     assert pool.free_pages == n_pages
     assert int(pool.refcount.sum()) == 0
     assert (np.asarray(pool.table) == pool.sentinel).all()
+
+
+@pytest.mark.skipif(not _HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_random_share_cache_evict_sequences(data):
+    """Prefix-sharing traffic: random admit (fresh or sharing another
+    slot's prefix), cacheable retire, and eviction under pressure keep the
+    free/mapped/cached partition exact and ``check()`` green at every
+    step.  Models the scheduler's use of share/extend/release(cacheable)/
+    reclaim without the radix policy layer."""
+
+    class DropOldest:                    # stand-in evictor (LRU-agnostic)
+        def __init__(self, pool):
+            self.pool = pool
+
+        def evict(self, n):
+            for p in self.pool.cached_page_ids()[:n]:
+                self.pool.reclaim(p)
+
+    n_pages = data.draw(st.integers(4, 24), label="n_pages")
+    page_size = data.draw(st.integers(1, 8), label="page_size")
+    slots = data.draw(st.integers(2, 6), label="slots")
+    pool = KVPool(n_pages, page_size, slots)
+    pool.evictor = DropOldest(pool)
+    held: dict[int, list[int]] = {}      # slot -> pages mapped
+    sticky: set[int] = set()             # pages flagged cacheable-on-release
+    for _ in range(data.draw(st.integers(1, 40), label="ops")):
+        op = data.draw(st.sampled_from(["admit", "share", "retire"]),
+                       label="op")
+        free_slots = [s for s in range(slots) if s not in held]
+        if op == "retire" and held:
+            slot = data.draw(st.sampled_from(sorted(held)), label="slot_r")
+            pages = held.pop(slot)
+            pool.release(slot, cacheable=sticky)
+        elif op == "admit" and free_slots:
+            slot = data.draw(st.sampled_from(free_slots), label="slot_a")
+            tokens = data.draw(st.integers(1, n_pages * page_size),
+                               label="tokens")
+            if pool.can_admit(tokens):
+                pages = pool.reserve(slot, tokens)
+                held[slot] = pages
+                if data.draw(st.booleans(), label="stick?"):
+                    sticky.update(pages[:max(1, len(pages) // 2)])
+        elif op == "share" and free_slots and held:
+            donor = data.draw(st.sampled_from(sorted(held)), label="donor")
+            slot = data.draw(st.sampled_from(free_slots), label="slot_s")
+            prefix = held[donor][:data.draw(
+                st.integers(1, len(held[donor])), label="depth")]
+            extra = data.draw(st.integers(0, 2), label="extra")
+            if len(prefix) + extra <= pool.max_pages and (
+                    extra == 0 or pool.free_pages + pool.cached_pages
+                    >= extra):
+                pool.share(slot, prefix)
+                if extra:
+                    pool.extend(slot, extra)
+                held[slot] = pool.slot_pages(slot)
+        # exact partition after every op
+        mapped = {p for pages in held.values() for p in pages}
+        assert pool.used_pages == len(mapped)
+        assert (pool.free_pages + pool.cached_pages + len(mapped)
+                == n_pages)
+        for p in mapped:
+            want = sum(p in pages for pages in held.values())
+            assert int(pool.refcount[p]) == want
+        pool.check()
+    # drain: cached pages are reclaimable, everything else frees exactly
+    for slot in list(held):
+        pool.release(slot, cacheable=sticky)
+        held.pop(slot)
+    pool.evictor.evict(pool.cached_pages)
+    assert pool.free_pages == n_pages
+    assert int(pool.refcount.sum()) == 0
+    pool.check()

@@ -1,0 +1,128 @@
+"""Shared-prefix radix cache: page-aligned matching (with the one-token
+suffix cap), insert/dedup semantics, the evictable-cached lifecycle over
+the pool, and LRU leaf-first eviction order."""
+import pytest
+
+from repro.serve.kvpool import KVPool, PageError
+from repro.serve.prefixcache import PrefixCache
+
+
+def _pool(n_pages=16, page_size=4, slots=4):
+    pool = KVPool(n_pages, page_size, slots)
+    return pool, PrefixCache(pool)
+
+
+def test_match_is_page_aligned_and_caps_suffix():
+    pool, cache = _pool(page_size=4)
+    toks = list(range(100, 110))                 # 10 tokens = 2.5 pages
+    pages = pool.reserve(0, len(toks) + 4)
+    cache.insert(toks[:8], pages[:2])            # the 2 full prompt pages
+    # a longer prompt with the same prefix matches both pages
+    got, n = cache.match(toks + [1, 2, 3])
+    assert got == pages[:2] and n == 8
+    # a 7-token prompt still shares its one full page and prefills 3
+    assert cache.match(toks[:7]) == (pages[:1], 4)
+    # prompts no longer than one page can never match (the whole prompt
+    # would be prefix — nothing left to prefill)
+    assert cache.match(toks[:4]) == ([], 0)
+    # an exactly-2-page prompt matches only 1 page: at least one token
+    # must remain as suffix to produce next-token logits
+    got, n = cache.match(toks[:8])
+    assert got == pages[:1] and n == 4
+    # diverging tokens stop the walk at the split point
+    got, n = cache.match(toks[:4] + [0, 0, 0, 0, 9])
+    assert got == pages[:1] and n == 4
+
+
+def test_insert_keeps_existing_entries():
+    pool, cache = _pool()
+    t = list(range(8))
+    a = pool.reserve(0, 8)
+    b = pool.reserve(1, 8)
+    assert cache.insert(t, a[:2]) == 2
+    # a duplicate prompt registers nothing: the first writer wins and the
+    # second request's pages stay private (freed normally at retirement)
+    assert cache.insert(t, b[:2]) == 0
+    assert cache.match(t + [9]) == (a[:2], 8)
+    assert cache.n_entries == 2
+    cache.check()
+
+
+def test_insert_rejects_reregistered_page():
+    pool, cache = _pool()
+    pages = pool.reserve(0, 8)
+    cache.insert(list(range(8)), pages[:2])
+    with pytest.raises(PageError, match="already registered"):
+        cache.insert(list(range(50, 58)), pages[:2])
+
+
+def test_retire_parks_cached_then_match_revives():
+    pool, cache = _pool(n_pages=8, page_size=4)
+    t = list(range(12))
+    pages = pool.reserve(0, 12)
+    cache.insert(t[:8], pages[:2])
+    pool.release(0, cacheable=cache.registered_pages(pages))
+    assert pool.cached_pages == 2 and pool.free_pages == 6
+    cache.check()
+    # the cached chain still matches; sharing it revives the pages
+    got, n = cache.match(t)
+    assert got == pages[:2] and n == 8
+    pool.share(1, got)
+    assert pool.cached_pages == 0
+    assert (pool.refcount[got] == 1).all()
+    cache.check()
+
+
+def test_evict_is_lru_and_leaf_first():
+    pool, cache = _pool(n_pages=12, page_size=2, slots=4)
+    old = [9, 9, 8, 8]                           # chain A: 2 pages
+    new = [7, 7, 6, 6]                           # chain B: 2 pages
+    pa = pool.reserve(0, 4)
+    cache.insert(old, pa)
+    pb = pool.reserve(1, 4)
+    cache.insert(new, pb)
+    cache.match(old + [1])                       # touch A: now most recent
+    pool.release(0, cacheable=frozenset(pa))
+    pool.release(1, cacheable=frozenset(pb))
+    # evicting one page drops B's leaf (LRU chain), not A's
+    assert cache.evict(1) == 1
+    assert cache.match(old + [1])[1] == 4        # A fully intact
+    assert cache.match(new + [1])[1] == 2        # B peeled from the deep end
+    cache.check()
+    # those matches were uses: B's root is now the most recent chain, so
+    # the next leaf-first cascade peels A (leaf, then its exposed root)
+    assert cache.evict(2) == 2
+    assert cache.match(old + [1]) == ([], 0)
+    assert cache.match(new + [1])[1] == 2
+    assert cache.evicted_pages == 3
+    cache.check()
+
+
+def test_evict_skips_mapped_pages():
+    pool, cache = _pool(n_pages=8, page_size=2, slots=2)
+    t = [5, 5, 4, 4]
+    pages = pool.reserve(0, 4)
+    cache.insert(t, pages)
+    # slot 0 is still live: nothing is evictable
+    assert cache.evict(4) == 0
+    assert cache.n_entries == 2
+    pool.release(0, cacheable=cache.registered_pages(pages))
+    assert cache.evict(4) == 2
+    assert pool.free_pages == pool.n_pages
+    cache.check()
+
+
+def test_pool_pressure_drives_eviction_through_alloc():
+    """reserve/extend under a full pool reclaim cached pages on demand —
+    the prefix cache reserves zero capacity."""
+    pool, cache = _pool(n_pages=4, page_size=2, slots=2)
+    t = list(range(8))
+    pages = pool.reserve(0, 8)                   # whole pool
+    cache.insert(t, pages)
+    pool.release(0, cacheable=cache.registered_pages(pages))
+    assert pool.free_pages == 0 and pool.cached_pages == 4
+    got = pool.reserve(1, 6)                     # forces 3 evictions
+    assert len(got) == 3
+    assert cache.evicted_pages == 3
+    assert cache.n_entries == 1
+    cache.check()
