@@ -18,14 +18,21 @@ tokens computed vs skipped.
                                                   [--prefix-cache]
                                                   [--arch A]
 
+``--prefill-chunk N`` serves through chunked prefill (page-aligned chunks
+interleaved with decode segments); the full mode's ``chunked_compare``
+runs a long+short mixed workload both ways and asserts chunking bounds
+the worst-case join stall (``max_join_s`` — the decode pause every live
+slot suffers while a prompt joins) without losing tokens.
+
 ``--smoke`` is the CI sanity mode (~5 s): engine only, asserts a nonzero
 throughput (with ``--paged``: the paged engine, plus 100% page
 reclamation; with ``--prefix-cache``: additionally a nonzero prefix hit
-rate on the shared-prompt workload).  The full mode asserts the engine
-beats the seed loop >= 3x, that at equal KV memory the paged pool either
-admits more concurrent requests than dense or matches dense throughput
-within 10% while reclaiming every retired slot's pages, and that the
-prefix cache cuts prefill tokens computed by exactly its hit rate without
+rate on the shared-prompt workload; with ``--prefill-chunk``: that chunk
+continuations actually ran).  The full mode asserts the engine beats the
+seed loop >= 3x, that at equal KV memory the paged pool either admits
+more concurrent requests than dense or matches dense throughput within
+10% while reclaiming every retired slot's pages, and that the prefix
+cache cuts prefill tokens computed by exactly its hit rate without
 losing concurrency.
 
 Every invocation also appends its rows to ``BENCH_serve.json`` at the
@@ -84,10 +91,11 @@ def write_bench_json(rows: dict, path: str = BENCH_JSON) -> None:
     os.replace(tmp, path)
 
 
-def full_bench_rows(r: dict, capacity: dict, prefix: dict) -> dict:
+def full_bench_rows(r: dict, capacity: dict, prefix: dict,
+                    chunked: dict | None = None) -> dict:
     """The full-mode trajectory rows, assembled once for both entry
     points (CLI main and the benchmarks.run table hook)."""
-    return {
+    rows = {
         "full-dense": {k: r[k] for k in
                        ("engine_tok_s", "seed_tok_s", "speedup",
                         "kv_util_mean", "peak_live_slots")},
@@ -96,6 +104,10 @@ def full_bench_rows(r: dict, capacity: dict, prefix: dict) -> dict:
         "full-prefix-on": prefix["cache-on"],
         "full-prefix-off": prefix["cache-off"],
     }
+    if chunked is not None:
+        rows["full-chunked-on"] = chunked["chunked"]
+        rows["full-chunked-off"] = chunked["unchunked"]
+    return rows
 
 
 def make_requests(vocab: int, n: int, seed: int = 0):
@@ -114,6 +126,18 @@ def make_shared_requests(vocab: int, n: int, prefix_len: int, seed: int = 0):
     return [(rid, system + rng.integers(
         0, vocab, size=int(rng.integers(2, 8))).tolist())
         for rid in range(n)]
+
+
+def make_long_mixed_requests(vocab: int, n: int, long_len: int,
+                             n_long: int = 2, seed: int = 0):
+    """Head-of-line workload: a few ``long_len``-token prompts scattered
+    among short ones — the traffic shape whose unchunked join stalls
+    every live slot's decode for the whole long prefill."""
+    rng = np.random.default_rng(seed)
+    longs = set(rng.choice(n, size=min(n_long, n), replace=False).tolist())
+    return [(rid, rng.integers(
+        0, vocab, size=long_len if rid in longs
+        else int(rng.integers(4, 12))).tolist()) for rid in range(n)]
 
 
 def seed_batcher_run(model, params, cfg: ServeConfig, requests, max_new):
@@ -157,13 +181,15 @@ def bench(arch: str = "qwen2-0.5b", *, batch: int = 4, requests: int = 12,
           max_new: int = 24, max_len: int = 96, sync_every: int = 8,
           smoke: bool = False, paged: bool = False, page_size: int = 16,
           total_pages: int | None = None, prefix_cache: bool = False,
-          shared_prefix: int = 0, seed: int = 0) -> dict:
+          shared_prefix: int = 0, prefill_chunk: int | None = None,
+          seed: int = 0) -> dict:
     cfg = get_config(arch).reduced()
     model = Model(cfg)
     params = pm.unwrap(model.init(jax.random.key(seed)))
     scfg = ServeConfig(max_len=max_len, batch=batch, sync_every=sync_every,
                        paged=paged, page_size=page_size,
-                       total_pages=total_pages, prefix_cache=prefix_cache)
+                       total_pages=total_pages, prefix_cache=prefix_cache,
+                       prefill_chunk=prefill_chunk)
     if prefix_cache and not shared_prefix:
         shared_prefix = 2 * page_size      # two full shareable pages
     if shared_prefix:
@@ -183,6 +209,7 @@ def bench(arch: str = "qwen2-0.5b", *, batch: int = 4, requests: int = 12,
     toks = sum(len(v) for v in got.values())
     util = batcher.kv_utilization()
     pstats = batcher.prefix_stats()
+    jstats = batcher.join_stats()
     out = {"arch": arch, "tokens": toks, "paged": paged,
            "prefix_cache": prefix_cache,
            "engine_tok_s": toks / dt_engine, "engine_s": dt_engine,
@@ -191,7 +218,9 @@ def bench(arch: str = "qwen2-0.5b", *, batch: int = 4, requests: int = 12,
            "peak_live_slots": util["peak_live_slots"],
            "prefix_hit_rate": pstats["hit_rate"],
            "prefill_computed": pstats["prefill_computed"],
-           "prefill_skipped": pstats["prefill_skipped"]}
+           "prefill_skipped": pstats["prefill_skipped"],
+           "chunk_joins": jstats["chunk_joins"],
+           "max_join_s": jstats["max_join_s"]}
     if paged:
         # a drained pool holds no mapped pages: everything is back on the
         # free list except prefix pages parked evictable-cached (zero
@@ -287,6 +316,88 @@ def prefix_compare(arch: str = "qwen2-0.5b", *, requests: int = 12,
     return res
 
 
+def chunked_compare(arch: str = "qwen2-0.5b", *, requests: int = 8,
+                    max_new: int = 16, max_len: int | None = None,
+                    page_size: int = 16, chunk: int = 32,
+                    long_len: int = 120, seed: int = 0) -> dict:
+    """Chunked vs unchunked prefill on a long+short mixed workload at
+    equal config.  The number under test is ``max_join_s``: every refill
+    join stalls all live slots' decode for its duration, so an unchunked
+    120-token prompt makes one long pause while the chunked engine takes
+    several short page-aligned bites interleaved with decode segments —
+    bounded join latency at identical token output (greedy)."""
+    cfg = get_config(arch).reduced()
+    model = Model(cfg)
+    params = pm.unwrap(model.init(jax.random.key(seed)))
+    if max_len is None:
+        # the long prompts must fit whatever --max-new the caller picked
+        max_len = long_len + max_new + 2 * page_size
+    reqs = make_long_mixed_requests(cfg.vocab, requests, long_len,
+                                    seed=seed)
+    base = dict(max_len=max_len, batch=4, sync_every=8, paged=True,
+                page_size=page_size)
+
+    res = {}
+    for name, ch in (("unchunked", None), ("chunked", chunk)):
+        scfg = ServeConfig(**base, prefill_chunk=ch)
+        engine_run(model, params, scfg, reqs, max_new)      # warmup
+        t0 = time.perf_counter()
+        got, b = engine_run(model, params, scfg, reqs, max_new)
+        dt = time.perf_counter() - t0
+        toks = sum(len(v) for v in got.values())
+        j = b.join_stats()
+        res[name] = {"tok_s": toks / dt, "s": dt, "tokens": toks,
+                     "joins": j["joins"], "chunk_joins": j["chunk_joins"],
+                     "max_join_s": j["max_join_s"],
+                     "mean_join_s": j["mean_join_s"],
+                     "tokens_by_rid": {r: v for r, v in got.items()}}
+    # greedy parity is part of the bench contract, not just the tests
+    assert (res["chunked"]["tokens_by_rid"]
+            == res["unchunked"]["tokens_by_rid"]), \
+        "chunked prefill changed sampled tokens"
+    for r in res.values():
+        del r["tokens_by_rid"]
+    return res
+
+
+def prefill_kernel_timing(arch: str = "qwen2-0.5b", *, b: int = 4,
+                          lq: int = 32, pages: int = 64,
+                          page_size: int = 16, reps: int = 3) -> dict:
+    """Pallas flash-prefill kernel (interpret off-TPU) vs the XLA gather
+    ref on one suffix-prefill shape — reported for trajectory only (the
+    interpreter is expected to lose off-TPU; the kernel path is routed in
+    on real backends)."""
+    from repro.kernels.paged_attn import (paged_prefill_attn_pallas,
+                                          paged_prefill_attn_ref)
+    cfg = get_config(arch).reduced()
+    hq, hkv = cfg.n_heads, cfg.kv_heads
+    d = cfg.resolved_head_dim
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((b, lq, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((pages, page_size, hkv, d)),
+                    jnp.float32)
+    v = jnp.asarray(rng.standard_normal((pages, page_size, hkv, d)),
+                    jnp.float32)
+    p_max = pages // b
+    tbl = jnp.asarray(rng.permutation(pages)[:b * p_max]
+                      .reshape(b, p_max).astype(np.int32))
+    off = jnp.asarray(rng.integers(0, (p_max - 2) * page_size - lq,
+                                   size=b).astype(np.int32))
+    ln = off + lq
+
+    def timed(fn):
+        fn(q, k, v, tbl, off, ln).block_until_ready()    # compile
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = fn(q, k, v, tbl, off, ln)
+        out.block_until_ready()
+        return (time.perf_counter() - t0) / reps
+
+    return {"kernel_interpret_s": timed(paged_prefill_attn_pallas),
+            "xla_ref_s": timed(jax.jit(paged_prefill_attn_ref)),
+            "backend": jax.default_backend()}
+
+
 def run(table) -> None:
     """Hook for benchmarks.run: engine-vs-seed, dense-vs-paged and
     prefix-cache rows; also refreshes BENCH_serve.json."""
@@ -313,7 +424,15 @@ def run(table) -> None:
               f"{on['prefill_computed']} vs {off['prefill_computed']} "
               f"tokens, {on['peak_live_slots']} vs "
               f"{off['peak_live_slots']} live slots")
-    write_bench_json(full_bench_rows(r, c, p))
+    ch = chunked_compare(requests=8, max_new=16)
+    con, coff = ch["chunked"], ch["unchunked"]
+    table.add("serve chunked prefill (long prompts)",
+              con["s"] * 1e9,
+              f"{con['tok_s']:.1f} tok/s, max join stall "
+              f"{con['max_join_s'] * 1e3:.0f}ms vs "
+              f"{coff['max_join_s'] * 1e3:.0f}ms unchunked "
+              f"({con['chunk_joins']} chunk joins)")
+    write_bench_json(full_bench_rows(r, c, p, ch))
 
 
 def main() -> None:
@@ -331,16 +450,40 @@ def main() -> None:
                     help="shared-prefix radix cache (needs --paged); runs "
                          "a repeated-system-prompt workload and reports "
                          "hit rate + prefill tokens computed vs skipped")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked prefill (needs --paged): admit prompts "
+                         "in page-aligned chunks of this many tokens, "
+                         "interleaved with decode segments")
     ap.add_argument("--smoke", action="store_true",
                     help="CI sanity: engine only, tiny sizes, ~5s")
     args = ap.parse_args()
     if args.prefix_cache and not args.paged:
         ap.error("--prefix-cache requires --paged")
+    if args.prefill_chunk is not None:
+        if not args.paged:
+            ap.error("--prefill-chunk requires --paged")
+        if args.prefill_chunk <= 0:
+            ap.error("--prefill-chunk must be positive")
+        if args.prefill_chunk % args.page_size:
+            ap.error(f"--prefill-chunk must be a multiple of --page-size "
+                     f"({args.page_size})")
     if args.smoke:
-        r = bench(args.arch, batch=2, requests=4, max_new=4, max_len=32,
+        smoke_ps = min(args.page_size, 8)
+        chunk = args.prefill_chunk
+        if chunk is not None:
+            # the smoke shrinks the page size; re-align the chunk to it
+            chunk = max(smoke_ps, chunk - chunk % smoke_ps)
+        r = bench(args.arch, batch=2, requests=4, max_new=4,
+                  # chunked prompts carry a 2*chunk shared prefix — scale
+                  # the window so any valid chunk size fits
+                  max_len=2 * chunk + 32 if chunk else 32,
                   sync_every=4, smoke=True, paged=args.paged,
-                  page_size=min(args.page_size, 8),
-                  prefix_cache=args.prefix_cache)
+                  page_size=smoke_ps, prefix_cache=args.prefix_cache,
+                  prefill_chunk=chunk,
+                  # at the smoke's tiny default prompts a chunk never
+                  # splits — make every prompt long enough to take 2+
+                  # bites (the shared prefix also feeds --prefix-cache)
+                  shared_prefix=2 * chunk if chunk else 0)
         assert r["engine_tok_s"] > 0, r
         if args.paged:
             assert r["pages_reclaimed"], "retired pages were not reclaimed"
@@ -348,14 +491,20 @@ def main() -> None:
             assert r["prefix_hit_rate"] > 0, \
                 "shared-prompt workload produced no prefix-cache hits"
             assert r["prefill_skipped"] > 0, r
-        mode = ("paged+prefix" if args.prefix_cache
+        if chunk:
+            assert r["chunk_joins"] > 0, \
+                "chunked smoke ran no chunk continuations"
+        mode = ("chunked" if chunk
+                else "paged+prefix" if args.prefix_cache
                 else "paged" if args.paged else "dense")
         write_bench_json({f"smoke-{mode}": {
             "tok_s": r["engine_tok_s"], "tokens": r["tokens"],
             "kv_util_mean": r["kv_util_mean"],
             "prefix_hit_rate": r["prefix_hit_rate"],
             "prefill_computed": r["prefill_computed"],
-            "prefill_skipped": r["prefill_skipped"]}})
+            "prefill_skipped": r["prefill_skipped"],
+            "chunk_joins": r["chunk_joins"],
+            "pages_reclaimed": bool(r.get("pages_reclaimed", False))}})
         print(f"[serve_bench --smoke] {mode}: {r['tokens']} tokens, "
               f"{r['engine_tok_s']:.1f} tok/s, "
               f"KV util {r['kv_util_mean']:.0%}, "
@@ -365,7 +514,8 @@ def main() -> None:
     r = bench(args.arch, batch=args.batch, requests=args.requests,
               max_new=args.max_new, max_len=args.max_len,
               sync_every=args.sync_every, paged=args.paged,
-              page_size=args.page_size, prefix_cache=args.prefix_cache)
+              page_size=args.page_size, prefix_cache=args.prefix_cache,
+              prefill_chunk=args.prefill_chunk)
     mode = ("paged+prefix" if args.prefix_cache
             else "paged" if args.paged else "dense")
     print(f"[serve_bench] arch={r['arch']} mode={mode} "
@@ -411,7 +561,29 @@ def main() -> None:
     assert on["prefill_computed"] + on["prefill_skipped"] == total, pc
     assert on["peak_live_slots"] >= off["peak_live_slots"], \
         "prefix sharing lost concurrency at equal pool size"
-    write_bench_json(full_bench_rows(r, c, pc))
+
+    ch = chunked_compare(args.arch, max_new=args.max_new)
+    con, coff = ch["chunked"], ch["unchunked"]
+    print(f"[chunked prefill @ long+short] off: {coff['tok_s']:.1f} tok/s, "
+          f"max join stall {coff['max_join_s'] * 1e3:.0f}ms "
+          f"({coff['joins']} joins)")
+    print(f"                                on: {con['tok_s']:.1f} tok/s, "
+          f"max join stall {con['max_join_s'] * 1e3:.0f}ms "
+          f"({con['joins']} joins, {con['chunk_joins']} continuations)")
+    assert con["chunk_joins"] > 0, "long prompts were never chunked"
+    # each chunked join does strictly less work than the one long join,
+    # but max-of-few-wall-clock-samples is noisy — gate the mean hard and
+    # give the max a 25% scheduling-noise allowance
+    assert con["mean_join_s"] < coff["mean_join_s"], \
+        "chunked prefill did not shrink the mean join stall"
+    assert con["max_join_s"] < 1.25 * coff["max_join_s"], \
+        "chunked prefill did not bound the worst-case join stall"
+
+    kt = prefill_kernel_timing(args.arch)
+    print(f"[prefill kernel]  pallas(interpret={kt['backend'] != 'tpu'}): "
+          f"{kt['kernel_interpret_s'] * 1e3:.1f}ms / call, xla ref: "
+          f"{kt['xla_ref_s'] * 1e3:.1f}ms / call on {kt['backend']}")
+    write_bench_json(full_bench_rows(r, c, pc, ch))
 
 
 if __name__ == "__main__":

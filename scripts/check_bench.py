@@ -1,0 +1,143 @@
+#!/usr/bin/env python
+"""Gate the serving perf trajectory: fresh BENCH_serve.json vs baseline.
+
+Every ``serve_bench`` invocation writes its rows to ``BENCH_serve.json``;
+this script compares them against the committed
+``benchmarks/baselines/serve_baseline.json`` and fails (exit 1) when the
+trajectory regresses — so a PR that quietly halves serving throughput or
+breaks page reclamation fails CI instead of landing.  This is the
+measurement discipline PrIM-style benchmarking argues for: the numbers
+are only meaningful if something checks them on every change.
+
+Checks per baseline row (rows the baseline does not pin are ignored, so
+local experiments don't trip the gate):
+
+* ``tok_s``: fresh >= BENCH_TOL x baseline (default 0.5 — wall-clock
+  throughput varies across runners; the gate catches collapses, not
+  noise).  Skipped with a note when the backends differ (a CPU baseline
+  says nothing about TPU throughput).
+* ``prefix_hit_rate`` / ``prefill_skipped``: must stay nonzero wherever
+  the baseline has them nonzero (the radix cache still hits).
+* ``pages_reclaimed``: must stay truthy wherever the baseline pins it
+  (retired slots still return their pages).
+* ``chunk_joins``: nonzero wherever the baseline has it nonzero (long
+  prompts still get chunked).
+* ``kv_util_mean``: in (0, 1.5] — paged sharing can push utilization
+  above 1.0, but not past every-slot-shares-everything sanity.
+
+Always prints a one-line-per-row delta table (ci.sh runs it last as the
+bench summary).
+
+  python scripts/check_bench.py [--bench PATH] [--baseline PATH]
+  BENCH_TOL=0.4 python scripts/check_bench.py     # looser throughput gate
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), os.pardir))
+BENCH = os.path.join(ROOT, "BENCH_serve.json")
+BASELINE = os.path.join(ROOT, "benchmarks", "baselines",
+                        "serve_baseline.json")
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f).get("rows", {})
+
+
+def _fmt(v) -> str:
+    if isinstance(v, bool):
+        return str(v)
+    if isinstance(v, float):
+        return f"{v:.2f}"
+    return str(v)
+
+
+def check(bench_path: str = BENCH, baseline_path: str = BASELINE,
+          tol: float | None = None) -> int:
+    """Returns the number of failed checks (0 == gate passes)."""
+    if tol is None:
+        tol = float(os.environ.get("BENCH_TOL", "0.5"))
+    try:
+        fresh = _load(bench_path)
+    except (OSError, ValueError) as e:
+        print(f"check_bench: cannot read {bench_path}: {e}")
+        return 1
+    try:
+        base = _load(baseline_path)
+    except (OSError, ValueError) as e:
+        print(f"check_bench: cannot read {baseline_path}: {e}")
+        return 1
+
+    failures = []
+    lines = []
+    for name in sorted(base):
+        brow = base[name]
+        frow = fresh.get(name)
+        if frow is None:
+            failures.append(f"{name}: row missing from {bench_path} "
+                            "(bench tier did not run?)")
+            lines.append(f"  {name:<22} MISSING")
+            continue
+        row_fail = []
+        notes = []
+        b_tok, f_tok = brow.get("tok_s"), frow.get("tok_s")
+        if b_tok:
+            if brow.get("backend") != frow.get("backend"):
+                notes.append(f"tok/s not compared "
+                             f"({brow.get('backend')} baseline vs "
+                             f"{frow.get('backend')} run)")
+            elif f_tok is None or f_tok < tol * b_tok:
+                row_fail.append(
+                    f"tok_s {_fmt(f_tok)} < {tol:.2f} x baseline "
+                    f"{_fmt(b_tok)}")
+        for key in ("prefix_hit_rate", "prefill_skipped", "chunk_joins"):
+            if brow.get(key) and not frow.get(key):
+                row_fail.append(f"{key} dropped to zero "
+                                f"(baseline {_fmt(brow[key])})")
+        if brow.get("pages_reclaimed") and not frow.get("pages_reclaimed"):
+            row_fail.append("pages_reclaimed is no longer true")
+        util = frow.get("kv_util_mean")
+        if util is not None and not 0.0 < util <= 1.5:
+            row_fail.append(f"kv_util_mean {_fmt(util)} outside (0, 1.5]")
+
+        delta = ""
+        if b_tok and f_tok and brow.get("backend") == frow.get("backend"):
+            delta = f"tok/s {_fmt(f_tok)} vs {_fmt(b_tok)} " \
+                    f"({(f_tok / b_tok - 1) * 100:+.0f}%)"
+        elif notes:
+            delta = notes[0]
+        status = "FAIL: " + "; ".join(row_fail) if row_fail else "ok"
+        lines.append(f"  {name:<22} {delta:<34} {status}")
+        failures.extend(f"{name}: {f}" for f in row_fail)
+
+    print(f"[check_bench] {bench_path} vs {baseline_path} "
+          f"(BENCH_TOL={tol:.2f})")
+    for line in lines:
+        print(line)
+    if failures:
+        print(f"[check_bench] {len(failures)} regression(s):")
+        for f in failures:
+            print(f"  - {f}")
+    else:
+        print("[check_bench] trajectory ok")
+    return len(failures)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default=BENCH)
+    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--tol", type=float, default=None,
+                    help="throughput tolerance factor (default env "
+                         "BENCH_TOL or 0.5)")
+    args = ap.parse_args()
+    sys.exit(1 if check(args.bench, args.baseline, args.tol) else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,32 @@
 #!/usr/bin/env bash
-# CI gate: tier-1 tests + serving-throughput liveness checks.
+# CI gate: tier-1 tests + serving-throughput liveness checks + the
+# bench-trajectory gate (scripts/check_bench.py vs the committed
+# benchmarks/baselines/serve_baseline.json).
 #
-#   scripts/ci.sh          # fast tier: -m "not slow" + dense/paged smokes
+#   scripts/ci.sh            # fast tier: -m "not slow" + serve smokes
 #   CI_FULL=1 scripts/ci.sh  # additionally run the slow-marked tests
+#
+# The property-test tier (tests/test_properties.py, test_kvpool.py
+# hypothesis traffic) importorskips hypothesis, so a missing install
+# would silently drop that coverage — fail loudly here instead.
+# CI_SKIP_HYPOTHESIS=1 opts out on constrained images that cannot
+# install it (the skip is then explicit, not silent).
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+if ! python -c "import hypothesis" >/dev/null 2>&1; then
+  if [[ "${CI_SKIP_HYPOTHESIS:-0}" == "1" ]]; then
+    echo "WARNING: hypothesis not installed; property-test tier will be" \
+         "SKIPPED (CI_SKIP_HYPOTHESIS=1)."
+  else
+    echo "ERROR: hypothesis is not installed, so the property-test tier" \
+         "(allocator/radix invariants under random traffic) would be" \
+         "silently skipped." >&2
+    echo "Fix: pip install hypothesis   (or rerun with" \
+         "CI_SKIP_HYPOTHESIS=1 to skip it explicitly)" >&2
+    exit 1
+  fi
+fi
 
 echo "== tier-1 (fast): pytest -m 'not slow' =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q -m "not slow"
@@ -13,6 +35,11 @@ if [[ "${CI_FULL:-0}" == "1" ]]; then
   echo "== tier-1 (slow markers) =="
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q -m "slow"
 fi
+
+# start the trajectory from scratch: the smokes below must regenerate
+# every gated row, so check_bench fails if a tier stopped running rather
+# than silently passing on stale committed numbers
+rm -f BENCH_serve.json
 
 echo "== serving throughput smoke (dense) =="
 timeout 300 python benchmarks/serve_bench.py --smoke
@@ -24,3 +51,13 @@ echo "== serving smoke (paged + shared-prefix radix cache) =="
 # repeated-system-prompt workload; the smoke asserts a nonzero prefix
 # hit rate and that prefill tokens were actually skipped
 timeout 300 python benchmarks/serve_bench.py --paged --prefix-cache --smoke
+
+echo "== serving smoke (chunked prefill) =="
+# long-prompt workload; the smoke asserts chunk continuations actually
+# ran (PREFILLING slots resumed across join rounds)
+timeout 300 python benchmarks/serve_bench.py --paged --prefill-chunk 16 --smoke
+
+echo "== bench trajectory vs committed baseline =="
+# fails on throughput collapse / lost hit rate / broken reclamation, and
+# doubles as the one-line-per-row bench delta summary
+python scripts/check_bench.py

@@ -1,3 +1,4 @@
-from .ops import paged_attn, paged_attn_xla, paged_prefill_attn  # noqa: F401
+from .ops import (paged_attn, paged_attn_xla,  # noqa: F401
+                  paged_prefill_attn, paged_prefill_attn_pallas)
 from .ref import (gather_pages, paged_attn_ref,  # noqa: F401
                   paged_prefill_attn_ref)

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from .kernel import paged_attn_kernel
+from .prefill_kernel import paged_prefill_attn_kernel
 from .ref import gather_pages
 
 
@@ -59,6 +60,32 @@ def paged_attn_xla(q: jnp.ndarray, k_pages: jnp.ndarray,
     return decode_attn_ref(q, k, v, lengths).astype(q.dtype)
 
 
+def paged_prefill_attn_pallas(q: jnp.ndarray, k_pages: jnp.ndarray,
+                              v_pages: jnp.ndarray, table: jnp.ndarray,
+                              q_offset: jnp.ndarray, kv_len: jnp.ndarray, *,
+                              interpret: bool = True) -> jnp.ndarray:
+    """The Pallas flash-prefill path (see :mod:`prefill_kernel`): q
+    [B, L, Hq, D] causal suffix queries at per-slot depths ``q_offset``
+    [B], over pooled pages masked to ``kv_len``.  Queries are folded to
+    [B, Hkv, L * G, D] so the kernel's block rows fuse (token, group) and
+    D stays on the lane axis; K/V are cast to the query dtype (the pool
+    may hold a narrower storage dtype)."""
+    b, lq, hq, d = q.shape
+    hkv = k_pages.shape[2]
+    g = hq // hkv
+    qf = q.reshape(b, lq, hkv, g, d).transpose(0, 2, 1, 3, 4)
+    qf = qf.reshape(b, hkv, lq * g, d)
+    tbl = _clamp_table(table, k_pages.shape[0])
+    off = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32).reshape(-1),
+                           (b,))
+    ln = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1), (b,))
+    out = paged_prefill_attn_kernel(qf, k_pages.astype(q.dtype),
+                                    v_pages.astype(q.dtype), tbl, off, ln,
+                                    g=g, interpret=interpret)
+    return out.reshape(b, hkv, lq, g, d).transpose(0, 2, 1, 3, 4) \
+              .reshape(b, lq, hq, d)
+
+
 def paged_prefill_attn(q: jnp.ndarray, k_pages: jnp.ndarray,
                        v_pages: jnp.ndarray, table: jnp.ndarray,
                        q_offset: jnp.ndarray,
@@ -69,13 +96,24 @@ def paged_prefill_attn(q: jnp.ndarray, k_pages: jnp.ndarray,
 
     This is the suffix-only prefill path: a joining slot whose prompt
     prefix is already resident (shared prefix pages mapped by the radix
-    cache) computes attention for *only its uncached suffix*, with the
-    gather reading the shared pages in place — the prefix KV is neither
-    recomputed nor restored.  Sentinel table entries clamp inside the
-    gather and are masked by ``kv_len``.  Prefill is compute-bound (not
-    the kernel's memory-bound decode regime) so the gather runs on XLA;
-    ``paged_attn`` stays the one-token Pallas path.
+    cache, or written by an earlier prefill chunk) computes attention for
+    *only its uncached suffix*, with the gather reading the resident pages
+    in place — the prefix KV is neither recomputed nor restored.  Sentinel
+    table entries clamp inside the gather and are masked by ``kv_len``.
+
+    Routing follows the same ``DecodeAttnPolicy`` as the decode ops: on
+    real TPU backends (or ``mode="kernel"``) this runs the Pallas
+    flash-prefill kernel (:mod:`prefill_kernel`), whose page walk skips
+    dead pages at both ends of the causal window; elsewhere the XLA
+    gather-then-attend reference keeps the interpreter out of the serving
+    hot loop.  MLA callers (no per-head pages to walk) stay on the ref.
     """
+    from ..decode_attn import active_policy
+    pol = active_policy()
+    if pol.kernel_wanted():
+        return paged_prefill_attn_pallas(q, k_pages, v_pages, table,
+                                         q_offset, kv_len,
+                                         interpret=pol.resolve_interpret())
     from .ref import paged_prefill_attn_ref
     return paged_prefill_attn_ref(q, k_pages, v_pages, table,
                                   q_offset, kv_len)

@@ -1,0 +1,151 @@
+"""Paged GQA prefill attention (flash-prefill over a page table).
+
+The suffix-only prefill regime (PR 3's radix cache, and chunked prefill on
+top of it): a block of ``Lq`` new prompt tokens per slot, sitting at a
+per-slot absolute depth ``q_offset[b]`` (its resident cached-prefix /
+already-prefilled length), attends causally over everything below it —
+shared prefix pages, earlier chunks and the block's own K/V, all resident
+in the pooled ``[n_pages, page_size, Hkv, D]`` allocation and named by the
+``[B, max_pages]`` table.  Unlike :mod:`kernel` (one query row, pure
+memory-bound), the query block here re-uses every fetched page across
+``Lq * G`` rows, so the kernel is the compute-bound sibling: same page
+walk, fatter matmuls.
+
+Layout mirrors the decode kernel.  The page table, per-slot query offsets
+and per-slot live lengths are scalar-prefetched, so the BlockSpec index
+map for grid step ``(b, h, p)`` redirects the K/V DMA to physical page
+``table[b, p]`` — the gather costs nothing extra.  Queries are pre-folded
+to ``[B, Hkv, Lq * G, D]`` (row ``r`` is query token ``r // G``, group
+member ``r % G``) so the block keeps D on the 128-lane axis and the fused
+(query, group) rows on sublanes; the flash accumulator (m, l, acc) is
+staged in VMEM across the page walk.
+
+Command skipping (§5.1.2) at page granularity, same two levels as decode:
+
+* inside the kernel, ``pl.when(page_base < kv_len)`` makes every page past
+  a slot's live depth a no-op (the accumulator carries through) and the
+  dead page's DMA is redirected to the slot's first page, so no fresh HBM
+  line is touched;
+* causality adds a third skip decode does not have: a page strictly above
+  *every* query row of the block (``page_base > q_offset + Lq - 1``) is
+  dead too — with chunked prefill most of the table is either below the
+  chunk (prefix: mask-free full compute) or above it (skipped), so the
+  per-chunk work stays O(depth), not O(table width);
+* the caller prunes the grid by slicing the table to the page-count
+  bucket, exactly like the decode path.
+
+The fully-masked-row hazard of flash attention (a row whose max stays
+``-inf`` would normalize garbage) cannot arise here: page 0 holds key
+position 0, which every query row ``q_offset + t >= 0`` may attend to, so
+after the first live page every row's running max is finite.  Rows of a
+slot with ``kv_len == 0`` never enter compute and produce zeros.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _make_kernel(ps: int, g: int, scale: float):
+    def kernel(tbl_ref, off_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+               m_ref, l_ref, acc_ref):
+        bi = pl.program_id(0)
+        p = pl.program_id(2)
+        np_ = pl.num_programs(2)
+        off = off_ref[bi]
+        ln = len_ref[bi]
+        lg = m_ref.shape[0]               # Lq * G fused rows
+
+        @pl.when(p == 0)
+        def _():
+            m_ref[...] = jnp.full_like(m_ref, -1e30)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        base = p * ps
+        # row r is query token r // g at absolute position off + r // g
+        rows = jax.lax.broadcasted_iota(jnp.int32, (lg, 1), 0)
+        qpos = off + rows // g                                # [lg, 1]
+        kpos = base + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+
+        # page-granular command skipping, both ends of the causal window:
+        # pages past the slot's live depth AND pages strictly above every
+        # query row of this block do no compute (their DMA was redirected
+        # to the slot's first page, so no new HBM line was pulled either)
+        @pl.when((base < ln) & (base <= off + (lg - 1) // g))
+        def _():
+            q = q_ref[0, 0]                  # [lg, D]
+            k = k_ref[0, :, 0, :]            # [ps, D]
+            v = v_ref[0, :, 0, :]
+            scores = jax.lax.dot_general(
+                q, k, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32) * scale   # [lg, ps]
+            live = (kpos <= qpos) & (kpos < ln)               # [lg, ps]
+            scores = jnp.where(live, scores, -1e30)
+            m_prev = m_ref[...]              # [lg, 1]
+            m_new = jnp.maximum(m_prev, scores.max(axis=-1, keepdims=True))
+            pexp = jnp.exp(scores - m_new)
+            corr = jnp.exp(m_prev - m_new)
+            l_ref[...] = l_ref[...] * corr + pexp.sum(axis=-1, keepdims=True)
+            acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+                pexp.astype(jnp.float32), v.astype(jnp.float32),
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            m_ref[...] = m_new
+
+        @pl.when(p == np_ - 1)
+        def _():
+            o_ref[0, 0] = (acc_ref[...]
+                           / jnp.maximum(l_ref[...], 1e-30)
+                           ).astype(o_ref.dtype)
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("g", "interpret"))
+def paged_prefill_attn_kernel(q: jnp.ndarray, k_pages: jnp.ndarray,
+                              v_pages: jnp.ndarray, table: jnp.ndarray,
+                              q_offset: jnp.ndarray, kv_len: jnp.ndarray,
+                              *, g: int, interpret: bool = True
+                              ) -> jnp.ndarray:
+    """q: [B, Hkv, Lq * G, D] fused query rows (row ``r`` = token ``r // g``
+    of group member ``r % g``); k_pages/v_pages: [N, ps, Hkv, D] pooled
+    pages; table: [B, P] int32, every entry < N (callers clamp sentinels);
+    q_offset/kv_len: [B] int32 per-slot depth of the query block and total
+    live KV length (``q_offset + Lq`` for a suffix prefill)."""
+    b, hkv, lg, d = q.shape
+    ps = k_pages.shape[1]
+    p_max = table.shape[1]
+    grid = (b, hkv, p_max)
+
+    def kv_map(bi, h, p, tbl, off, ln):
+        # dead pages (past the live depth, or above the whole query block)
+        # re-fetch the slot's first page instead of pulling a fresh line
+        base = p * ps
+        dead = (base >= ln[bi]) | (base > off[bi] + (lg - 1) // g)
+        pg = jnp.where(dead, tbl[bi, 0], tbl[bi, p])
+        return (pg, 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, lg, d),
+                         lambda bi, h, p, tbl, off, ln: (bi, h, 0, 0)),
+            pl.BlockSpec((1, ps, 1, d), kv_map),
+            pl.BlockSpec((1, ps, 1, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, lg, d),
+                               lambda bi, h, p, tbl, off, ln: (bi, h, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((lg, 1), jnp.float32),
+                        pltpu.VMEM((lg, 1), jnp.float32),
+                        pltpu.VMEM((lg, d), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _make_kernel(ps, g, 1.0 / math.sqrt(d)), grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, lg, d), q.dtype),
+        interpret=interpret)(table, q_offset, kv_len, q, k_pages, v_pages)

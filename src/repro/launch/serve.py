@@ -25,7 +25,8 @@ def run(arch: str, *, reduced: bool = True, requests: int = 4,
         eos_id: int | None = None, attn_mode: str = "auto",
         paged: bool = False, page_size: int = 16,
         total_pages: int | None = None, prefix_cache: bool = False,
-        shared_prefix: int = 0, admission: str = "fifo") -> dict:
+        shared_prefix: int = 0, admission: str = "fifo",
+        prefill_chunk: int | None = None) -> dict:
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -35,7 +36,7 @@ def run(arch: str, *, reduced: bool = True, requests: int = 4,
                        temperature=temperature, attn_mode=attn_mode,
                        paged=paged, page_size=page_size,
                        total_pages=total_pages, prefix_cache=prefix_cache,
-                       admission=admission)
+                       admission=admission, prefill_chunk=prefill_chunk)
     b = Batcher(model, params, scfg, eos_id=eos_id, seed=seed)
     rng = np.random.default_rng(seed)
     system = rng.integers(0, cfg.vocab, size=shared_prefix).tolist()
@@ -51,6 +52,11 @@ def run(arch: str, *, reduced: bool = True, requests: int = 4,
     pstats = b.prefix_stats()
     mode = (f"paged pool {b.pool.n_pages}x{b.pool.page_size}" if paged
             else "dense")
+    if prefill_chunk:
+        j = b.join_stats()
+        mode += (f" + chunked prefill ({prefill_chunk} tok/chunk, "
+                 f"{j['chunk_joins']} continuations, max join stall "
+                 f"{j['max_join_s'] * 1e3:.0f}ms)")
     if prefix_cache:
         mode += (f" + prefix cache (hit rate "
                  f"{pstats['hit_rate']:.0%}, "
@@ -94,7 +100,14 @@ def main() -> None:
                     choices=("fifo", "skip-ahead"),
                     help="paged admission order: fifo blocks on the queue "
                          "head; skip-ahead admits the first queued request "
-                         "whose pages fit (bounded lookahead)")
+                         "whose pages fit (bounded lookahead, aged so a "
+                         "blocked head cannot starve)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked prefill (needs --paged): prefill each "
+                         "prompt's uncached suffix at most this many "
+                         "tokens per join round (multiple of --page-size), "
+                         "interleaving long-prompt admission with decode "
+                         "segments to bound the join stall")
     args = ap.parse_args()
     run(args.arch, reduced=args.reduced, requests=args.requests,
         max_new=args.max_new, batch=args.batch, max_len=args.max_len,
@@ -102,7 +115,7 @@ def main() -> None:
         eos_id=args.eos_id, attn_mode=args.attn_mode, paged=args.paged,
         page_size=args.page_size, total_pages=args.total_pages,
         prefix_cache=args.prefix_cache, shared_prefix=args.shared_prefix,
-        admission=args.admission)
+        admission=args.admission, prefill_chunk=args.prefill_chunk)
 
 
 if __name__ == "__main__":

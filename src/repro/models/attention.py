@@ -183,9 +183,12 @@ def _paged_gather(pool: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
 def _paged_prefill_route(q, cache: "PagedKVCache", q_offset, kv_len):
     """Route multi-token GQA queries over paged KV through the kernel
     package's prefill path: each row's queries sit at its own depth
-    ``q_offset`` (0 for a fresh prompt; the cached-prefix length for a
-    suffix-only prefill, where the gather reads shared prefix pages in
-    place instead of recomputing them)."""
+    ``q_offset`` (0 for a fresh prompt; the resident-prefix length for a
+    suffix-only or chunked prefill, where the gather reads shared prefix
+    pages — and earlier chunks — in place instead of recomputing them).
+    The op resolves kernel-vs-XLA by the active DecodeAttnPolicy: the
+    Pallas flash-prefill kernel on real TPU backends, the gather ref
+    elsewhere."""
     from ..kernels.paged_attn import paged_prefill_attn
     return paged_prefill_attn(q, cache.k, cache.v, cache.table,
                               q_offset, kv_len)

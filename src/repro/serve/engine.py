@@ -57,6 +57,21 @@ class ServeConfig:
     # occupancy under mixed prompt sizes, bounded reorder window)
     admission: str = "fifo"
     admission_lookahead: int = 8
+    # skip-ahead aging: a bypassed head's priority grows with every skip;
+    # once it has been skipped ``admission_max_skips`` times it becomes a
+    # barrier (nothing is admitted past it until it fits), so sustained
+    # small-request load cannot starve a big prompt.  0 degenerates
+    # skip-ahead to FIFO.
+    admission_max_skips: int = 8
+    # chunked prefill (needs paged): a joining prompt's uncached suffix is
+    # prefilled at most ``prefill_chunk`` tokens per join round, the slot
+    # parking in the PREFILLING state (device done-latch frozen) between
+    # chunks so live slots' decode segments interleave with the remaining
+    # chunks instead of stalling behind one long prompt.  Must be a
+    # multiple of ``page_size`` (chunk boundaries then never land inside a
+    # shared prefix page); None = whole suffix in one join (PR 3
+    # behavior).
+    prefill_chunk: int | None = None
 
     @property
     def max_pages(self) -> int:
@@ -263,6 +278,17 @@ def make_paged_join(model: Model, cfg: ServeConfig, *, eos_id: int | None):
     that first prefills it are still exact: per layer the pooled scatter
     precedes the gather, so the writer row's pages are visible to every
     reader row of the same call.
+
+    Chunked prefill adds ``commit_mask`` [B]: the subset of joining rows
+    whose prompt *completes* with this call.  Commit rows sample their
+    first token and go live exactly as before.  Non-commit rows (a
+    mid-prompt chunk) write their K/V and advance ``lengths`` to the new
+    filled depth, but keep their token frozen, ``remaining`` at 0 and
+    ``done`` latched True — the decode scan then treats them as retired
+    slots (no sampling, no cache growth, PAD emissions) until a later
+    join's chunk, at ``prefix_lens`` = the depth this one set, commits
+    them.  With ``commit_mask == join_mask`` this is bit-for-bit the
+    unchunked join.
     """
     from ..configs.base import BlockKind
     temp = cfg.temperature
@@ -270,7 +296,8 @@ def make_paged_join(model: Model, cfg: ServeConfig, *, eos_id: int | None):
     seg_kinds = [s.kind for s in model.cfg.resolved_segments()]
 
     def join(params, caches, tok, lengths, done, remaining,
-             join_mask, prompts, plens, budgets, key, pages, prefix_lens):
+             join_mask, prompts, plens, budgets, key, pages, prefix_lens,
+             commit_mask):
         write_tbl = jnp.where(join_mask[:, None], pages, sentinel)
         with decode_attn_policy(mode=cfg.attn_mode,
                                 interpret=cfg.attn_interpret):
@@ -295,10 +322,12 @@ def make_paged_join(model: Model, cfg: ServeConfig, *, eos_id: int | None):
         else:
             is_eos = first == eos_id
         rem_new = budgets - 1
-        tok = jnp.where(join_mask[:, None], first[:, None], tok)
+        tok = jnp.where(commit_mask[:, None], first[:, None], tok)
         lengths = jnp.where(join_mask, prefix_lens + plens, lengths)
-        remaining = jnp.where(join_mask, rem_new, remaining)
-        done = jnp.where(join_mask, is_eos | (rem_new <= 0), done)
+        remaining = jnp.where(commit_mask, rem_new,
+                              jnp.where(join_mask, 0, remaining))
+        done = jnp.where(commit_mask, is_eos | (rem_new <= 0),
+                         jnp.where(join_mask, True, done))
         return caches, tok, lengths, done, remaining, key, first
     return join
 

@@ -63,11 +63,41 @@ retirement frees them.  ``"skip-ahead"`` scans up to
 ``cfg.admission_lookahead`` queued requests for the first admissible one
 when the head blocks: higher slot occupancy under mixed prompt sizes, at
 the cost of a bounded reorder window (per-slot lengths keep every
-request's tokens schedule-independent either way).
+request's tokens schedule-independent either way).  **Aging** bounds the
+reordering: every time a blocked request is bypassed its skip count
+grows, and once it reaches ``cfg.admission_max_skips`` it becomes a
+barrier — the lookahead scan stops at it, so sustained small-request
+load cannot starve a big prompt indefinitely (``max_skips=0``
+degenerates skip-ahead to FIFO).
+
+Chunked prefill (``cfg.prefill_chunk``, needs paged): a long prompt's
+uncached suffix no longer monopolizes one join — it is prefilled in
+page-aligned chunks of at most ``prefill_chunk`` tokens, one chunk per
+refill round, the slot sitting in the **PREFILLING** state in between:
+
+    queued --admit--> PREFILLING --last chunk--> decoding --EOS/budget-->
+    retired            (chunks interleave with other slots' decode
+                        segments; device done-latch keeps the slot
+                        frozen — no sampling, no cache growth, PAD
+                        emissions — while its table row keeps accepting
+                        chunk scatters at ``cache_len`` = filled depth)
+
+Pages for the whole worst case are still reserved at admission (no
+mid-prefill preemption); each continuation round re-enters the same
+``jit_paged_join`` with ``prefix_lens`` = the filled depth, exactly the
+suffix-resume path the prefix cache introduced, and only the final chunk
+samples a first token (``commit_mask``).  Chunk boundaries are
+page-aligned, so a frozen slot's placeholder decode writes (overwritten
+by the next chunk) can never land in a shared prefix page, and prompt
+pages are registered in the radix tree *as chunks cover them* — a
+queue-mate can match and gather a page in the same join that writes it
+(scatters precede gathers per layer), but never one the writer has not
+reached.
 """
 from __future__ import annotations
 
 import collections
+import time
 
 import jax
 import jax.numpy as jnp
@@ -103,6 +133,24 @@ class ContinuousBatcher:
         self.results: dict[int, list[int]] = {}
         if cfg.admission not in ("fifo", "skip-ahead"):
             raise ValueError(f"unknown admission policy {cfg.admission!r}")
+        if cfg.prefill_chunk is not None:
+            from ..configs.base import BlockKind
+            if not cfg.paged:
+                raise ValueError("prefill_chunk requires paged=True "
+                                 "(chunks resume through the page table)")
+            if cfg.prefill_chunk <= 0:
+                raise ValueError("prefill_chunk must be positive")
+            if cfg.prefill_chunk % cfg.page_size:
+                raise ValueError(
+                    f"prefill_chunk {cfg.prefill_chunk} must be a multiple "
+                    f"of page_size {cfg.page_size} (chunk boundaries must "
+                    "never land inside a shared prefix page)")
+            if any(s.kind is BlockKind.SSM
+                   for s in model.cfg.resolved_segments()):
+                raise ValueError(
+                    "prefill_chunk is attention-only: a hybrid SSM "
+                    "model's recurrent state cannot resume mid-prompt "
+                    "across join calls")
         b = cfg.batch
         if cfg.paged:
             self.pool = KVPool(cfg.pool_pages, cfg.page_size, b,
@@ -141,11 +189,25 @@ class ContinuousBatcher:
         self.slot_rid: list[int | None] = [None] * b
         self.slot_len = [0] * b
         self.slot_budget = [0] * b
+        # chunked-prefill state: a slot with pending suffix tokens is
+        # PREFILLING (device done-latch frozen); ``slot_filled`` mirrors
+        # the device ``lengths`` row = prompt tokens resident so far
+        self.slot_pending: list[list[int]] = [[] for _ in range(b)]
+        self.slot_prompt: list[list[int] | None] = [None] * b
+        self.slot_filled = [0] * b
         self.outputs: dict[int, list[int]] = {}
         self._loops: dict[tuple[int, int | None], object] = {}
         # KV memory accounting, sampled once per decode segment:
         # (live tokens, allocated token capacity, live slots)
         self.kv_samples: list[tuple[int, int, int]] = []
+        # skip-ahead aging: times each queued rid has been bypassed
+        self._skips: dict[int, int] = {}
+        self.admit_order: list[int] = []
+        # join-latency trajectory: wall time of every refill that ran a
+        # join (the decode stall a long prompt causes — what chunking
+        # bounds) and how many of those joins were chunk continuations
+        self.join_times: list[float] = []
+        self.chunk_joins = 0
 
     # ------------------------------------------------------------------
     def submit(self, rid: int, prompt: list[int]) -> None:
@@ -193,13 +255,16 @@ class ContinuousBatcher:
         matched pages are mapped via ``KVPool.share`` and only suffix +
         budget pages must be free (hit-aware admission).  FIFO blocks on
         the queue head; ``skip-ahead`` scans a bounded lookahead window
-        for the first request whose pages fit.  Returns
-        ``(rid, prompt, matched_tokens)`` or None.
+        for the first request whose pages fit — charging every bypassed
+        request one skip, and never scanning past a request whose skip
+        count has aged to ``cfg.admission_max_skips`` (the starvation
+        bound).  Returns ``(rid, prompt, matched_tokens)`` or None.
         """
         if not self.queue:
             return None
         if self.pool is None:
             rid, p = self.queue.popleft()
+            self.admit_order.append(rid)
             return rid, p, 0
         window = 1
         if self.cfg.admission == "skip-ahead":
@@ -212,8 +277,18 @@ class ContinuousBatcher:
                 matched, mtoks = self.prefix.match(p)
             if not self.pool.can_admit(len(p) + max_new,
                                        shared_pages=matched):
+                if self._skips.get(rid, 0) >= self.cfg.admission_max_skips:
+                    # aged out: this blocked request is now a barrier —
+                    # nothing may be admitted past it until it fits
+                    break
                 continue
             del self.queue[qi]
+            for prev in range(qi):
+                # everything scanned past was blocked: charge one skip
+                self._skips[self.queue[prev][0]] = \
+                    self._skips.get(self.queue[prev][0], 0) + 1
+            self._skips.pop(rid, None)
+            self.admit_order.append(rid)
             total = self.pool.pages_for(len(p) + max_new)
             if matched:
                 # refcounts go above 1 here: the prefix chain is mapped
@@ -223,18 +298,30 @@ class ContinuousBatcher:
             else:
                 self.pool.reserve(slot, len(p) + max_new)
             if self.prefix is not None:
-                # register the prompt's full pages now, so queue-mates in
-                # this same refill round already match them (their KV is
-                # written by the very join this admission feeds)
-                n_full = len(p) // self.pool.page_size
-                if n_full:
-                    self.prefix.insert(
-                        p[:n_full * self.pool.page_size],
-                        self.pool.slot_pages(slot)[:n_full])
+                # register the pages the *first chunk* will have written
+                # by the end of this refill round's join, so queue-mates
+                # in the same round already match them; later chunks
+                # extend the registration as they cover more pages
+                # (unchunked: the first chunk is the whole prompt)
+                chunk = self.cfg.prefill_chunk
+                covered = (len(p) if chunk is None
+                           else min(len(p), mtoks + chunk))
+                self._register_covered(slot, p, covered)
                 self.prefix_admits += 1
                 self.prefix_hits += bool(mtoks)
             return rid, p, mtoks
         return None
+
+    def _register_covered(self, slot: int, prompt: list[int],
+                          covered: int) -> None:
+        """Insert ``prompt``'s full pages up to ``covered`` resident
+        tokens into the radix tree (idempotent for already-registered
+        chunks — continuation rounds extend the chain)."""
+        ps = self.pool.page_size
+        n_full = min(covered, len(prompt)) // ps
+        if n_full:
+            self.prefix.insert(prompt[:n_full * ps],
+                               self.pool.slot_pages(slot)[:n_full])
 
     def _release_slot(self, slot: int) -> None:
         """Return ``slot``'s pages; registered prefix pages whose refcount
@@ -247,52 +334,89 @@ class ContinuousBatcher:
             cacheable = self.prefix.registered_pages(
                 self.pool.slot_pages(slot))
         self.pool.release(slot, cacheable=cacheable)
+        self.slot_pending[slot] = []
+        self.slot_prompt[slot] = None
+        self.slot_filled[slot] = 0
 
     # ------------------------------------------------------------------
     def _refill(self, max_new: int) -> None:
-        free = [i for i, r in enumerate(self.slot_rid) if r is None]
-        if not free or not self.queue:
-            return
-        # (slot, rid, prompt, cached-prefix tokens)
-        take: list[tuple[int, int, list[int], int]] = []
-        for slot in free:
+        chunk = self.cfg.prefill_chunk
+        # (slot, rid, piece tokens, depth before this piece, commits?)
+        take: list[tuple[int, int, list[int], int, bool]] = []
+        # 1. PREFILLING slots first: their next chunk rides this join, and
+        #    its about-to-be-covered pages are registered *before* the
+        #    admission scan so queue-mates can match them (their KV is
+        #    written by this very join; scatters precede gathers)
+        for slot, rid in enumerate(self.slot_rid):
+            if rid is None or not self.slot_pending[slot]:
+                continue
+            pend = self.slot_pending[slot]
+            piece = pend[:chunk] if chunk else list(pend)
+            depth = self.slot_filled[slot]
+            if self.prefix is not None:
+                self._register_covered(slot, self.slot_prompt[slot],
+                                       depth + len(piece))
+            take.append((slot, rid, piece, depth, len(piece) == len(pend)))
+            self.chunk_joins += 1
+        # 2. new admissions into free slots (first chunk of each)
+        for slot in [i for i, r in enumerate(self.slot_rid) if r is None]:
+            if not self.queue:
+                break
             cand = self._admit_next(slot, max_new)
             if cand is None:
                 break
-            take.append((slot, *cand))
+            rid, p, mtoks = cand
+            suffix = p[mtoks:]
+            piece = suffix[:chunk] if chunk else suffix
+            self.slot_prompt[slot] = p
+            self.slot_pending[slot] = suffix     # trimmed after the join
+            take.append((slot, rid, piece, mtoks,
+                         len(piece) == len(suffix)))
         if not take:
             return
+        t0 = time.perf_counter()
         b = self.cfg.batch
-        # the join prefills only each row's uncached suffix, so the padded
-        # width (and the jit bucket) shrinks with the hit depth
-        width = _pow2_bucket(max(len(p) - m for _, _, p, m in take), lo=8,
-                             hi=self.cfg.max_len)
+        # the join prefills only each row's uncached suffix piece, so the
+        # padded width (and the jit bucket) shrinks with hit depth and is
+        # bounded by the chunk size
+        width = _pow2_bucket(max(len(piece) for _, _, piece, _, _ in take),
+                             lo=8, hi=self.cfg.max_len)
         join_mask = np.zeros((b,), bool)
+        commit_mask = np.zeros((b,), bool)
         prompts = np.zeros((b, width), np.int32)
         plens = np.ones((b,), np.int32)
         prefix_lens = np.zeros((b,), np.int32)
-        for slot, _, p, mtoks in take:
-            suffix = p[mtoks:]
+        for slot, _, piece, depth, commit in take:
             join_mask[slot] = True
-            prompts[slot, :len(suffix)] = suffix
-            plens[slot] = len(suffix)
-            prefix_lens[slot] = mtoks
-            self.prefill_computed += len(suffix)
-            self.prefill_skipped += mtoks
+            commit_mask[slot] = commit
+            prompts[slot, :len(piece)] = piece
+            plens[slot] = len(piece)
+            prefix_lens[slot] = depth
+            self.prefill_computed += len(piece)
         join_args = (self.params, self.caches, self.tok, self.lengths,
                      self.done, self.remaining, jnp.asarray(join_mask),
                      jnp.asarray(prompts), jnp.asarray(plens),
                      jnp.full((b,), max_new, jnp.int32), self.key)
         if self.pool is not None:
             join_args += (jnp.asarray(self.pool.table),
-                          jnp.asarray(prefix_lens))
+                          jnp.asarray(prefix_lens),
+                          jnp.asarray(commit_mask))
         (self.caches, self.tok, self.lengths, self.done, self.remaining,
          self.key, first) = self._join(*join_args)
         first = np.asarray(first)
-        for slot, rid, p, _ in take:
+        for slot, rid, piece, depth, commit in take:
+            new_admission = self.slot_rid[slot] is None
+            if new_admission:
+                self.prefill_skipped += depth     # cached-prefix tokens
+            self.slot_filled[slot] = depth + len(piece)
+            self.slot_pending[slot] = self.slot_pending[slot][len(piece):]
+            self.slot_len[slot] = self.slot_filled[slot]
+            if not commit:
+                self.slot_rid[slot] = rid         # PREFILLING: occupied,
+                self.slot_budget[slot] = max_new  # frozen on device
+                continue
             out = [int(first[slot])]
             self.outputs[rid] = out
-            self.slot_len[slot] = len(p)
             if (self.eos is not None and out[0] == self.eos) or max_new <= 1:
                 self.results[rid] = out           # retired at birth
                 self.slot_rid[slot] = None
@@ -300,12 +424,17 @@ class ContinuousBatcher:
             else:
                 self.slot_rid[slot] = rid
                 self.slot_budget[slot] = max_new
+        self.join_times.append(time.perf_counter() - t0)
 
     # ------------------------------------------------------------------
     def _collect(self, emitted: np.ndarray) -> None:
         steps = emitted.shape[0]
         for i, rid in enumerate(self.slot_rid):
             if rid is None:
+                continue
+            if self.slot_pending[i]:
+                # PREFILLING: the device row is done-latched and emits
+                # only PADs until its last chunk commits — not a stall
                 continue
             out = self.outputs[rid]
             appended = 0
@@ -357,8 +486,13 @@ class ContinuousBatcher:
                     f"(max {self.pool.max_pages}/slot)")
         while self.queue or any(r is not None for r in self.slot_rid):
             self._refill(max_new)
-            if all(r is None for r in self.slot_rid):
-                if self.queue:
+            if not any(r is not None and not self.slot_pending[i]
+                       for i, r in enumerate(self.slot_rid)):
+                # nothing is decoding: if slots are still PREFILLING (or
+                # the queue is waiting on pages) the next refill round
+                # advances their chunks — a decode segment would only
+                # burn a scan on all-done rows
+                if self.queue or any(r is not None for r in self.slot_rid):
                     continue
                 break
             self._sample_kv()
@@ -405,6 +539,17 @@ class ContinuousBatcher:
                 "peak_util": max(utils, default=0.0),
                 "peak_live_slots": max(s for _, _, s in self.kv_samples),
                 "samples": len(self.kv_samples)}
+
+    def join_stats(self) -> dict:
+        """Join-segment latency trajectory: every refill that ran a join
+        stalls all live slots' decode for its duration — the number
+        chunked prefill exists to bound.  ``chunk_joins`` counts the
+        continuation pieces (0 when unchunked)."""
+        jt = self.join_times
+        return {"joins": len(jt),
+                "chunk_joins": self.chunk_joins,
+                "max_join_s": max(jt, default=0.0),
+                "mean_join_s": sum(jt) / len(jt) if jt else 0.0}
 
     def prefix_stats(self) -> dict:
         """Prefix-cache effectiveness: prefill tokens computed vs skipped

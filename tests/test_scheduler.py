@@ -130,3 +130,80 @@ def test_skip_ahead_lookahead_is_bounded(setup):
 
     assert peak(1) == 1      # window stops at the blocked head
     assert peak(3) == 2      # window reaches past it
+
+
+# --------------------------------------------------------------------------
+# skip-ahead aging (starvation bound)
+# --------------------------------------------------------------------------
+
+def _aging_batcher(model, params, max_skips):
+    """Pool staged so a big head blocks while smalls fit: 14 pages, an
+    occupier slot pinning 8, the big request needing 7 > 6 free."""
+    scfg = ServeConfig(max_len=64, batch=5, dtype=jnp.float32,
+                      paged=True, page_size=8, total_pages=14,
+                      admission="skip-ahead", admission_max_skips=max_skips)
+    b = Batcher(model, params, scfg)
+    b.pool.reserve(4, 64)          # occupier: 8 pages off the free list
+    rng = np.random.default_rng(4)
+    big = rng.integers(0, 100, size=48).tolist()      # 7 pages w/ budget 8
+    smalls = [rng.integers(0, 100, size=4).tolist() for _ in range(3)]
+    b.submit(100, big)
+    for i, s in enumerate(smalls):
+        b.submit(200 + i, s)
+    return b
+
+
+def test_skip_ahead_aging_becomes_barrier(setup):
+    """Each bypass charges the blocked head one skip; at max_skips it
+    turns into a barrier — later smalls stop being admitted past it even
+    though their pages fit."""
+    cfg, model, params = setup
+    b = _aging_batcher(model, params, max_skips=2)
+    assert b._admit_next(0, 8)[0] == 200          # skip 1 charged to big
+    assert b._admit_next(1, 8)[0] == 201          # skip 2 charged to big
+    assert b._skips[100] == 2
+    # a third small fits (2 of 2 free pages) but the aged head blocks it
+    assert b._admit_next(2, 8) is None
+    assert b.queue[0][0] == 100 and len(b.queue) == 2
+    # pages freeing unblocks the head itself; its skip record clears
+    b.pool.release(4)
+    assert b._admit_next(2, 8)[0] == 100
+    assert 100 not in b._skips
+    assert b._admit_next(3, 8)[0] == 202          # queue drains in order
+    assert b.admit_order == [200, 201, 100, 202]
+
+
+def test_skip_ahead_max_skips_zero_is_fifo(setup):
+    """max_skips=0 ages the head instantly: skip-ahead degenerates to
+    strict FIFO (nothing is ever admitted past a blocked head)."""
+    cfg, model, params = setup
+    b = _aging_batcher(model, params, max_skips=0)
+    assert b._admit_next(0, 8) is None
+    assert len(b.queue) == 4 and not b._skips
+
+
+def test_skip_ahead_aging_full_drain_parity(setup):
+    """End to end: aging changes only the admission schedule, never the
+    tokens (per-slot lengths keep requests schedule-independent)."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(8)
+    big = rng.integers(0, cfg.vocab, size=30).tolist()
+    smalls = [rng.integers(0, cfg.vocab, size=4).tolist() for _ in range(3)]
+    requests = [(0, smalls[0]), (1, big), (2, smalls[1]), (3, smalls[2])]
+    base = dict(max_len=64, batch=3, dtype=jnp.float32, sync_every=4,
+                paged=True, page_size=8, total_pages=6,
+                admission="skip-ahead")
+
+    def run(max_skips):
+        b = Batcher(model, params,
+                    ServeConfig(**base, admission_max_skips=max_skips))
+        for rid, p in requests:
+            b.submit(rid, p)
+        return b.run(max_new=8), b
+
+    loose, _ = run(max_skips=8)
+    tight, bt = run(max_skips=1)
+    for rid, _ in requests:
+        assert loose[rid] == tight[rid], rid
+    # once the big head ages out, the tight run stops packing smalls in
+    assert max(bt._skips.values(), default=0) == 0   # drained clean
