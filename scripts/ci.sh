@@ -57,7 +57,13 @@ echo "== serving smoke (chunked prefill) =="
 # ran (PREFILLING slots resumed across join rounds)
 timeout 300 python benchmarks/serve_bench.py --paged --prefill-chunk 16 --smoke
 
+echo "== serving smoke (self-speculative decoding) =="
+# repetitive-continuation workload; the smoke asserts the n-gram drafter
+# got drafts accepted (acceptance_rate > 0) at bit-identical output
+timeout 300 python benchmarks/serve_bench.py --paged --speculate 3 --smoke
+
 echo "== bench trajectory vs committed baseline =="
-# fails on throughput collapse / lost hit rate / broken reclamation, and
-# doubles as the one-line-per-row bench delta summary
-python scripts/check_bench.py
+# fails on throughput collapse / lost hit rate / dead drafter / broken
+# reclamation, and doubles as the one-line-per-row bench delta summary;
+# the table is also written to bench_delta.txt for the CI artifact
+python scripts/check_bench.py --out bench_delta.txt

@@ -117,3 +117,35 @@ def paged_prefill_attn(q: jnp.ndarray, k_pages: jnp.ndarray,
     from .ref import paged_prefill_attn_ref
     return paged_prefill_attn_ref(q, k_pages, v_pages, table,
                                   q_offset, kv_len)
+
+
+def paged_verify_attn(q: jnp.ndarray, k_pages: jnp.ndarray,
+                      v_pages: jnp.ndarray, table: jnp.ndarray,
+                      q_offset: jnp.ndarray,
+                      kv_len: jnp.ndarray) -> jnp.ndarray:
+    """Speculative-decode **verify** attention: score a slot's current
+    token plus its k drafts (``q`` [B, k+1, Hq, D]) in one call at the
+    slot's decode depth ``q_offset = lengths``.
+
+    This is *exactly* :func:`paged_prefill_attn` — a verify is a
+    multi-token causal query block at absolute depth, indistinguishable
+    from a suffix-prefill chunk at the kernel level — re-exported under
+    its serving-side name so the contract is explicit:
+
+    * the k+1 K/V rows were scattered at positions ``lengths .. lengths
+      + k`` *before* the gather (``_paged_insert`` is position-indexed,
+      scatters precede gathers per layer), so draft t attends over
+      drafts 0..t-1 through the table like any resident token;
+    * **rollback-safety** is a property of that position-indexed insert:
+      committing fewer than k+1 tokens just means ``lengths`` advances
+      past only the accepted prefix — the stale rows above it sit inside
+      the slot's reserved speculation window, are never readable (the
+      causal mask bounds every future read at the *new* ``lengths``),
+      and the next verify's scatter overwrites them;
+    * routing follows the same ``DecodeAttnPolicy``: the Pallas
+      flash-prefill kernel on real TPU backends (Lq = k+1 rows fused
+      with the GQA group on the sublane axis), the XLA gather ref
+      elsewhere.  Nothing k-specific is compiled — one executable serves
+      any draft that fits the reserved window.
+    """
+    return paged_prefill_attn(q, k_pages, v_pages, table, q_offset, kv_len)

@@ -26,7 +26,10 @@ def run(arch: str, *, reduced: bool = True, requests: int = 4,
         paged: bool = False, page_size: int = 16,
         total_pages: int | None = None, prefix_cache: bool = False,
         shared_prefix: int = 0, admission: str = "fifo",
-        prefill_chunk: int | None = None) -> dict:
+        prefill_chunk: int | None = None,
+        prefill_round_tokens: int | None = None,
+        speculate_k: int | None = None,
+        speculate_ngram: int = 2) -> dict:
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -36,7 +39,10 @@ def run(arch: str, *, reduced: bool = True, requests: int = 4,
                        temperature=temperature, attn_mode=attn_mode,
                        paged=paged, page_size=page_size,
                        total_pages=total_pages, prefix_cache=prefix_cache,
-                       admission=admission, prefill_chunk=prefill_chunk)
+                       admission=admission, prefill_chunk=prefill_chunk,
+                       prefill_round_tokens=prefill_round_tokens,
+                       speculate_k=speculate_k,
+                       speculate_ngram=speculate_ngram)
     b = Batcher(model, params, scfg, eos_id=eos_id, seed=seed)
     rng = np.random.default_rng(seed)
     system = rng.integers(0, cfg.vocab, size=shared_prefix).tolist()
@@ -57,15 +63,25 @@ def run(arch: str, *, reduced: bool = True, requests: int = 4,
         mode += (f" + chunked prefill ({prefill_chunk} tok/chunk, "
                  f"{j['chunk_joins']} continuations, max join stall "
                  f"{j['max_join_s'] * 1e3:.0f}ms)")
+        if prefill_round_tokens:
+            mode += (f" + round budget ({prefill_round_tokens} tok, "
+                     f"{j['budget_deferrals']} deferrals)")
     if prefix_cache:
         mode += (f" + prefix cache (hit rate "
                  f"{pstats['hit_rate']:.0%}, "
                  f"{pstats['prefill_skipped']} prefill tokens skipped)")
+    sstats = b.spec_stats()
+    if speculate_k:
+        mode += (f" + speculative k={speculate_k} (acceptance "
+                 f"{sstats['acceptance_rate']:.0%}, "
+                 f"{sstats['tokens_per_step']:.2f} tok/step)")
+    lat = b.latency_stats()
     print(f"[serve] {len(results)} requests, {toks} tokens in {dt:.1f}s "
           f"({toks / dt:.1f} tok/s on {jax.default_backend()}, {mode}, "
-          f"KV util {util['mean_util']:.0%})")
+          f"KV util {util['mean_util']:.0%}, TTFT p50 "
+          f"{lat['ttft_p50_s'] * 1e3:.0f}ms)")
     return {"results": results, "tok_per_s": toks / dt, "kv_util": util,
-            "prefix": pstats}
+            "prefix": pstats, "spec": sstats, "latency": lat}
 
 
 def main() -> None:
@@ -108,6 +124,19 @@ def main() -> None:
                          "tokens per join round (multiple of --page-size), "
                          "interleaving long-prompt admission with decode "
                          "segments to bound the join stall")
+    ap.add_argument("--prefill-round-tokens", type=int, default=None,
+                    help="decode-priority budget: cap the total prefill "
+                         "tokens (chunks + admissions) one refill round "
+                         "may take, deferring the rest to later rounds")
+    ap.add_argument("--speculate", type=int, default=None,
+                    help="self-speculative decoding (needs --paged, "
+                         "greedy): draft this many tokens per step from "
+                         "the slot's own history (n-gram lookup) and "
+                         "verify them in one multi-token paged attention "
+                         "call — bit-identical output, fewer steps on "
+                         "repetitive continuations")
+    ap.add_argument("--speculate-ngram", type=int, default=2,
+                    help="history-match width of the draft lookup")
     args = ap.parse_args()
     run(args.arch, reduced=args.reduced, requests=args.requests,
         max_new=args.max_new, batch=args.batch, max_len=args.max_len,
@@ -115,7 +144,9 @@ def main() -> None:
         eos_id=args.eos_id, attn_mode=args.attn_mode, paged=args.paged,
         page_size=args.page_size, total_pages=args.total_pages,
         prefix_cache=args.prefix_cache, shared_prefix=args.shared_prefix,
-        admission=args.admission, prefill_chunk=args.prefill_chunk)
+        admission=args.admission, prefill_chunk=args.prefill_chunk,
+        prefill_round_tokens=args.prefill_round_tokens,
+        speculate_k=args.speculate, speculate_ngram=args.speculate_ngram)
 
 
 if __name__ == "__main__":

@@ -158,7 +158,17 @@ def _paged_insert(pool: jnp.ndarray, vals: jnp.ndarray,
     ``table[b, (length[b] + t) // ps]`` at offset ``% ps``.  Positions
     whose logical page is unallocated (sentinel id >= N) or beyond the
     table width drop — exactly the dense path's out-of-range semantics,
-    and how a join masks non-joining rows out of a shared prefill."""
+    and how a join masks non-joining rows out of a shared prefill.
+
+    Because the write address is purely position-indexed, the insert is
+    **rollback-safe** for speculative decoding: a verify writes k+1 rows
+    at ``length .. length + k``, and if only ``a`` of them commit the
+    caller simply advances ``length`` by ``a`` — the stale rows above
+    the acceptance point are unreachable (every later read is causally
+    masked at the new length) and the next verify's scatter, starting at
+    the new length, overwrites them.  The scheduler reserves the k-row
+    overhang at admission so these writes never land past the slot's
+    pages (a dropped write would make a *accepted* draft read garbage)."""
     vals = vals.astype(pool.dtype)
     n, ps = pool.shape[0], pool.shape[1]
     b, l = vals.shape[:2]
@@ -185,7 +195,10 @@ def _paged_prefill_route(q, cache: "PagedKVCache", q_offset, kv_len):
     package's prefill path: each row's queries sit at its own depth
     ``q_offset`` (0 for a fresh prompt; the resident-prefix length for a
     suffix-only or chunked prefill, where the gather reads shared prefix
-    pages — and earlier chunks — in place instead of recomputing them).
+    pages — and earlier chunks — in place instead of recomputing them;
+    the *decode-time* ``lengths`` for a speculative draft-k verify,
+    whose Lq = k+1 block of current-token + drafts is the same causal
+    query-block-at-depth — see ``kernels.paged_attn.paged_verify_attn``).
     The op resolves kernel-vs-XLA by the active DecodeAttnPolicy: the
     Pallas flash-prefill kernel on real TPU backends, the gather ref
     elsewhere."""

@@ -111,8 +111,17 @@ class Model:
     def decode_step(self, params, tokens, caches, cache_len, *,
                     dtype=jnp.bfloat16, extra: dict | None = None,
                     pages=None):
-        """One decode step: tokens [B, 1] against filled caches (dense, or
-        paged when ``pages`` carries the slots' page tables)."""
+        """One decode step: tokens [B, L] against filled caches (dense, or
+        paged when ``pages`` carries the slots' page tables).
+
+        Plain decode passes L = 1.  Speculative decode passes L = k+1
+        (the current token plus k drafts): every token scatters its K/V
+        at ``cache_len + t``, attends causally at its absolute position,
+        and the returned logits cover **all L positions** — the verify
+        needs the model's own greedy output after every draft, and the
+        per-slot accepted advance is decided by the caller (the engine's
+        spec loop), which rolls back by simply not advancing
+        ``cache_len`` past the acceptance point."""
         batch = {"tokens": tokens}
         if extra:
             batch.update(extra)

@@ -279,7 +279,11 @@ def forward(params: dict, batch: dict, cfg: ArchConfig, *,
     absolute positions ``cache_len[b] + t`` — positions drive RoPE and
     the causal mask, paged K/V scatters land past the resident prefix,
     and attention gathers the prefix pages through the table instead of
-    recomputing them.
+    recomputing them.  The speculative draft-k verify is the same call
+    shape at decode time (L = k+1 at ``cache_len`` = the slot's live
+    length): nothing in the stack distinguishes a prompt chunk from a
+    draft window — the caller decides how far ``cache_len`` advances
+    afterwards, which is what makes rollback free.
     """
     from ..distributed.act_sharding import constrain_btd
     tokens = batch["tokens"]

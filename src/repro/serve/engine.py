@@ -72,6 +72,28 @@ class ServeConfig:
     # shared prefix page); None = whole suffix in one join (PR 3
     # behavior).
     prefill_chunk: int | None = None
+    # decode-priority chunk budget: cap the *total* prefill tokens (chunk
+    # continuations + new admissions) a single refill round may take, so
+    # many PREFILLING slots cannot monopolize a round and starve decode
+    # latency.  Admission stops once the cap is reached (the first piece
+    # of a round always goes through, so progress is guaranteed); deferred
+    # pieces ride the next round and are counted in ``join_stats()``.
+    # None (default) keeps the one-chunk-per-slot-per-round behavior.
+    prefill_round_tokens: int | None = None
+    # self-speculative decoding (needs paged; greedy/attention-only): each
+    # decode step drafts ``speculate_k`` candidate tokens from the slot's
+    # own prompt+output history (on-device n-gram lookup, see
+    # :func:`ngram_propose`) and verifies all k+1 tokens in ONE multi-token
+    # paged attention call — the PR 4 flash-prefill kernel at Lq = k+1,
+    # unchanged.  Greedy agreement decides the per-slot accepted length;
+    # accepted tokens commit, ``lengths`` advances by exactly that many,
+    # and the speculative K/V rows past the acceptance point are simply
+    # overwritten by the next step's verify (rollback = don't advance).
+    # Output is bit-identical to speculate-off greedy decode; only the
+    # steps-per-token changes.  ``speculate_ngram`` is the match width of
+    # the history lookup.
+    speculate_k: int | None = None
+    speculate_ngram: int = 2
 
     @property
     def max_pages(self) -> int:
@@ -130,12 +152,67 @@ def make_prefill(model: Model, cfg: ServeConfig):
 
 
 # ---------------------------------------------------------------------------
+# self-speculative drafting (on-device n-gram / prompt-lookup)
+# ---------------------------------------------------------------------------
+
+def ngram_propose(history: jnp.ndarray, lengths: jnp.ndarray, *,
+                  k: int, n: int) -> jnp.ndarray:
+    """Draft ``k`` continuation tokens per slot from the slot's own token
+    history — no draft model, just prompt/output lookup.
+
+    ``history`` [B, S] holds each slot's known tokens (prompt, then every
+    committed output token); position ``lengths[b]`` is the current token,
+    everything past it is unknown (stale values there are never read).
+    The tail ``n``-gram ``history[b, L-n+1 .. L]`` is matched against every
+    earlier window; the *most recent* match at start ``p`` gives a period
+    estimate ``d = (L - n + 1) - p``, and the draft extrapolates that
+    period: predicted position ``L + 1 + t`` copies position
+    ``L + 1 + t - d`` (from history when that lands at or below ``L``,
+    from an earlier draft of this very call otherwise — the unrolled
+    ``t`` loop makes that self-reference static).  No match degenerates
+    to ``d = 1``, i.e. repeat-the-current-token.
+
+    Drafts are *proposals only*: the verify pass accepts exactly the
+    prefix the model itself would have produced, so a bad draft costs
+    speed, never correctness.  Work is O(S * n) integer compares per
+    call — noise next to the attention sweep it amortizes.
+    """
+    b, s = history.shape
+    ln = jnp.asarray(lengths, jnp.int32)
+    idx = jnp.arange(s)
+    match = jnp.ones((b, s), bool)
+    for j in range(n):
+        shifted = history[:, jnp.minimum(idx + j, s - 1)]          # [B, S]
+        tail_j = jnp.take_along_axis(
+            history, jnp.clip(ln - n + 1 + j, 0, s - 1)[:, None], axis=1)
+        match &= shifted == tail_j
+    # candidate starts: window fully below the tail's own window, so the
+    # continuation position p + n is a known token (p <= L - n)
+    valid = idx[None, :] <= (ln - n)[:, None]
+    p = jnp.where(match & valid, idx[None, :], -1).max(axis=1)     # [B]
+    d = jnp.where(p >= 0, ln - n + 1 - p, 1).astype(jnp.int32)     # >= 1
+    drafts: list[jnp.ndarray] = []
+    for t in range(k):
+        src = ln + 1 + t - d                                       # [B]
+        from_hist = jnp.take_along_axis(
+            history, jnp.clip(src, 0, s - 1)[:, None], axis=1)[:, 0]
+        if drafts:
+            prev = jnp.stack(drafts, axis=1)                       # [B, t]
+            from_draft = jnp.take_along_axis(
+                prev, jnp.clip(t - d, 0, t - 1)[:, None], axis=1)[:, 0]
+        else:
+            from_draft = from_hist
+        drafts.append(jnp.where(src <= ln, from_hist, from_draft))
+    return jnp.stack(drafts, axis=1)                               # [B, k]
+
+
+# ---------------------------------------------------------------------------
 # device-resident decode loop
 # ---------------------------------------------------------------------------
 
 def make_decode_loop(model: Model, cfg: ServeConfig, *, steps: int,
                      eos_id: int | None, kv_cap: int | None = None,
-                     paged: bool = False):
+                     paged: bool = False, speculate_k: int = 0):
     """Build the fused multi-token decode driver.
 
     Returns ``loop(params, tok, caches, lengths, done, remaining, key
@@ -155,8 +232,29 @@ def make_decode_loop(model: Model, cfg: ServeConfig, *, steps: int,
     (and the XLA gather width) is the bucket — dead pages are never
     launched.  One executable is cached per (steps, P_cap) bucket, exactly
     like the dense loop's (steps, kv_cap) keying.
+
+    With ``speculate_k`` = k > 0 (paged + greedy only) each scan step is a
+    draft-k **verify** step instead of a one-token decode: the carry grows
+    a per-slot token ``history`` [B, max_len], :func:`ngram_propose`
+    drafts k candidates from it, and one ``model.decode_step`` call with
+    Lq = k+1 tokens (the current token + the drafts, at absolute depth
+    ``lengths`` — the PR 4 paged flash-prefill kernel *is* the verify
+    kernel) yields greedy outputs for every position.  The accepted length
+    is the longest prefix where draft t equals the model's own output at
+    position t-1; the step commits ``accepted + 1`` tokens (the +1 is the
+    model's bonus token after the last accepted draft), clipped by EOS
+    inside the window, the remaining budget and ``max_len``.  ``lengths``
+    advances by exactly the committed count — the K/V rows the verify
+    wrote past the acceptance point stay stale and are overwritten by the
+    next step's verify, whose write window starts at the new ``lengths``
+    (rollback by not advancing; admission reserved the k-token overhang).
+    ``emitted`` becomes [steps, B, k+1] with PAD past each step's
+    committed count.  Token-for-token this is bit-identical to the
+    speculate-off greedy loop: every committed token is the argmax the
+    plain loop would have produced at that position.
     """
     temp = cfg.temperature
+    spec_n = cfg.speculate_ngram
 
     def loop(params, tok, caches, lengths, done, remaining, key,
              pages=None):
@@ -185,7 +283,73 @@ def make_decode_loop(model: Model, cfg: ServeConfig, *, steps: int,
         carry = (tok, caches, lengths, done, remaining, key)
         carry, emitted = jax.lax.scan(body, carry, None, length=steps)
         return carry, emitted
-    return loop
+
+    if not speculate_k:
+        return loop
+    if not paged:
+        raise ValueError("speculate_k requires the paged loop")
+    k = speculate_k
+
+    def spec_loop(params, tok, caches, lengths, done, remaining, key,
+                  history, pages):
+        def body(carry, _):
+            tok, caches, lengths, done, remaining, key, history = carry
+            drafts = ngram_propose(history, lengths, k=k, n=spec_n)
+            qtok = jnp.concatenate([tok, drafts], axis=1)      # [B, k+1]
+            with decode_attn_policy(mode=cfg.attn_mode,
+                                    interpret=cfg.attn_interpret):
+                # Lq = k+1 at per-slot depth ``lengths``: K/V scatters at
+                # positions lengths..lengths+k, causal attention through
+                # the page table — the flash-prefill verify call
+                logits, caches = model.decode_step(
+                    params, qtok, caches, lengths, dtype=cfg.dtype,
+                    pages=pages)
+            key, _ = jax.random.split(key)     # greedy: keep key moving
+            out = jnp.argmax(logits.astype(jnp.float32),
+                             axis=-1).astype(jnp.int32)        # [B, k+1]
+            # accepted = longest prefix where the draft matches the
+            # model's own greedy output one position earlier; commit the
+            # accepted drafts plus the model's bonus token after them
+            agree = (drafts == out[:, :-1]).astype(jnp.int32)  # [B, k]
+            adv = jnp.cumprod(agree, axis=1).sum(axis=1) + 1   # [B] 1..k+1
+            if eos_id is not None:
+                hit = out == eos_id
+                first_eos = jnp.argmax(hit, axis=1)
+                adv = jnp.minimum(adv, jnp.where(hit.any(axis=1),
+                                                 first_eos + 1, k + 1))
+            adv = jnp.minimum(adv, remaining)              # token budget
+            adv = jnp.minimum(adv, cfg.max_len - lengths)  # window cap
+            adv = jnp.where(done, 0, adv)
+            jidx = jnp.arange(k + 1)[None, :]
+            commit = jidx < adv[:, None]                   # [B, k+1]
+            emit = jnp.where(commit, out, PAD_TOKEN)
+            last = jnp.take_along_axis(
+                out, jnp.maximum(adv - 1, 0)[:, None], axis=1)  # [B, 1]
+            # committed token j becomes known history at position
+            # lengths + 1 + j (position lengths holds the current token);
+            # non-committed columns scatter out of bounds and drop
+            bi = jnp.arange(out.shape[0])[:, None]
+            wpos = jnp.where(commit, lengths[:, None] + 1 + jidx,
+                             history.shape[1])
+            history = history.at[bi, wpos].set(out, mode="drop")
+            if eos_id is None:
+                eos_last = jnp.zeros_like(done)
+            else:
+                # an EOS inside the window truncated adv at itself, so if
+                # it was committed at all it is the last committed token
+                eos_last = (last[:, 0] == eos_id) & (adv > 0)
+            remaining = remaining - adv
+            lengths = lengths + adv
+            new_done = (done | eos_last | (remaining <= 0)
+                        | (lengths >= cfg.max_len))
+            tok = jnp.where((adv > 0)[:, None], last, tok)
+            return (tok, caches, lengths, new_done, remaining, key,
+                    history), emit
+
+        carry = (tok, caches, lengths, done, remaining, key, history)
+        carry, emitted = jax.lax.scan(body, carry, None, length=steps)
+        return carry, emitted                  # emitted [steps, B, k+1]
+    return spec_loop
 
 
 def jit_decode_loop(model: Model, cfg: ServeConfig, *, steps: int,
@@ -204,6 +368,18 @@ def jit_paged_decode_loop(model: Model, cfg: ServeConfig, *, steps: int,
     ``paged=True`` (the call site passes the sliced page table)."""
     loop = make_decode_loop(model, cfg, steps=steps, eos_id=eos_id,
                             paged=True)
+    return jax.jit(loop, donate_argnums=(2,))
+
+
+def jit_spec_decode_loop(model: Model, cfg: ServeConfig, *, steps: int,
+                         eos_id: int | None):
+    """Jitted self-speculative verify segment — the paged loop with
+    ``speculate_k`` drafts per step; takes ``(..., history, pages)`` and
+    returns ``emitted`` [steps, B, k+1] (PAD past each step's committed
+    count).  Caches are donated as usual; the history array is tiny
+    ([B, max_len] int32) and returned in the carry."""
+    loop = make_decode_loop(model, cfg, steps=steps, eos_id=eos_id,
+                            paged=True, speculate_k=cfg.speculate_k or 0)
     return jax.jit(loop, donate_argnums=(2,))
 
 

@@ -93,6 +93,38 @@ pages are registered in the radix tree *as chunks cover them* — a
 queue-mate can match and gather a page in the same join that writes it
 (scatters precede gathers per layer), but never one the writer has not
 reached.
+
+Decode-priority chunk budget (``cfg.prefill_round_tokens``): by default a
+refill round takes one chunk from *every* PREFILLING slot plus the first
+chunk of every new admission, so many concurrent long prompts can still
+make the round's join wide.  A round-token budget caps the total prefill
+tokens a single round may take: once the running total reaches the cap,
+further continuations are deferred to the next round (counted in
+``join_stats()['budget_deferrals']``) and admission stops.  The first
+piece of a round is always taken, so prefill always progresses — the
+budget trades prefill throughput for decode latency explicitly.
+
+Self-speculative decoding (``cfg.speculate_k``, needs paged; greedy and
+attention-only): decode segments run the draft-k verify loop from
+:func:`repro.serve.engine.make_decode_loop` — per step, k candidate
+tokens are drafted from the slot's own prompt+output ``history`` (the
+on-device n-gram/period lookup in ``engine.ngram_propose``) and verified
+in one Lq = k+1 paged attention call; the per-slot accepted length
+commits 1..k+1 tokens per step at bit-identical greedy output.  The
+scheduler's part of the contract:
+
+* **admission reserves the speculation window** — every verify writes
+  K/V up to position ``lengths + k``, so the worst-case page reservation
+  (and ``can_admit``, and the up-front ``max_len`` validation) grows
+  from ``prompt + max_new`` to ``prompt + max_new + k`` tokens;
+* **host history**: the prompt is written into the slot's history row at
+  admission and the first sampled token at commit; during decode the
+  device updates history inside the scan and the host mirror is synced
+  back at each segment boundary (joins are host-sync points already);
+* **variable advance**: ``emitted`` is [steps, B, k+1] — ``_collect``
+  walks each step's committed burst (PAD-terminated) with the same
+  EOS/budget retirement rules, and the per-step committed counts feed
+  ``spec_stats()`` (acceptance rate = accepted drafts / proposed).
 """
 from __future__ import annotations
 
@@ -104,7 +136,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from .engine import (PAD_TOKEN, ServeConfig, jit_decode_loop, jit_join,
-                     jit_paged_decode_loop, jit_paged_join)
+                     jit_paged_decode_loop, jit_paged_join,
+                     jit_spec_decode_loop)
 from .kvpool import KVPool
 from .prefixcache import PrefixCache
 from ..models.model_zoo import Model
@@ -151,6 +184,30 @@ class ContinuousBatcher:
                     "prefill_chunk is attention-only: a hybrid SSM "
                     "model's recurrent state cannot resume mid-prompt "
                     "across join calls")
+        if cfg.prefill_round_tokens is not None \
+                and cfg.prefill_round_tokens <= 0:
+            raise ValueError("prefill_round_tokens must be positive")
+        self.spec_k = cfg.speculate_k or 0
+        if cfg.speculate_k is not None:
+            from ..configs.base import BlockKind
+            if not cfg.paged:
+                raise ValueError(
+                    "speculate_k requires paged=True (the verify step "
+                    "writes and rolls back through the page table)")
+            if cfg.speculate_k < 1:
+                raise ValueError("speculate_k must be >= 1")
+            if cfg.speculate_ngram < 1:
+                raise ValueError("speculate_ngram must be >= 1")
+            if cfg.temperature != 0.0:
+                raise ValueError(
+                    "speculate_k is greedy-only for now: acceptance is "
+                    "defined by exact argmax agreement (temperature 0)")
+            if any(s.kind is BlockKind.SSM
+                   for s in model.cfg.resolved_segments()):
+                raise ValueError(
+                    "speculate_k is attention-only: a hybrid SSM model's "
+                    "recurrent state advances k+1 tokens per verify and "
+                    "cannot roll back past the acceptance point")
         b = cfg.batch
         if cfg.paged:
             self.pool = KVPool(cfg.pool_pages, cfg.page_size, b,
@@ -208,6 +265,24 @@ class ContinuousBatcher:
         # bounds) and how many of those joins were chunk continuations
         self.join_times: list[float] = []
         self.chunk_joins = 0
+        # decode-priority budget: prefill pieces pushed to a later round
+        # because the round's prefill_round_tokens cap was reached
+        self.budget_deferrals = 0
+        # self-speculation: host mirror of the per-slot token history the
+        # device drafter reads (prompt at admission, first token at
+        # commit, then synced back from the scan carry each segment), and
+        # the per-step acceptance accounting behind spec_stats()
+        self.history = np.zeros((b, cfg.max_len), np.int32)
+        self.spec_steps = 0
+        self.spec_proposed = 0
+        self.spec_accepted = 0
+        self.spec_emitted = 0
+        # request latency trajectory: wall-clock TTFT (run start -> first
+        # sampled token) and time-per-output-token per retired request
+        self._clock0: float | None = None
+        self._first_tok_t: dict[int, float] = {}
+        self.ttfts: list[float] = []
+        self.tpots: list[float] = []
 
     # ------------------------------------------------------------------
     def submit(self, rid: int, prompt: list[int]) -> None:
@@ -219,7 +294,10 @@ class ContinuousBatcher:
     def _loop(self, steps: int, cap: int | None):
         keyid = (steps, cap)
         if keyid not in self._loops:
-            if self.cfg.paged:
+            if self.spec_k:
+                self._loops[keyid] = jit_spec_decode_loop(
+                    self.model, self.cfg, steps=steps, eos_id=self.eos)
+            elif self.cfg.paged:
                 # cap shapes the page-table slice; the jit keys on it
                 self._loops[keyid] = jit_paged_decode_loop(
                     self.model, self.cfg, steps=steps, eos_id=self.eos)
@@ -275,7 +353,9 @@ class ContinuousBatcher:
             mtoks = 0
             if self.prefix is not None:
                 matched, mtoks = self.prefix.match(p)
-            if not self.pool.can_admit(len(p) + max_new,
+            # worst case covers the speculation window too: a verify step
+            # at the budget edge still writes K/V up to lengths + spec_k
+            if not self.pool.can_admit(len(p) + max_new + self.spec_k,
                                        shared_pages=matched):
                 if self._skips.get(rid, 0) >= self.cfg.admission_max_skips:
                     # aged out: this blocked request is now a barrier —
@@ -289,14 +369,14 @@ class ContinuousBatcher:
                     self._skips.get(self.queue[prev][0], 0) + 1
             self._skips.pop(rid, None)
             self.admit_order.append(rid)
-            total = self.pool.pages_for(len(p) + max_new)
+            total = self.pool.pages_for(len(p) + max_new + self.spec_k)
             if matched:
                 # refcounts go above 1 here: the prefix chain is mapped
                 # into this slot's table on top of its other references
                 self.pool.share(slot, matched)
                 self.pool.extend(slot, total - len(matched))
             else:
-                self.pool.reserve(slot, len(p) + max_new)
+                self.pool.reserve(slot, len(p) + max_new + self.spec_k)
             if self.prefix is not None:
                 # register the pages the *first chunk* will have written
                 # by the end of this refill round's join, so queue-mates
@@ -341,6 +421,8 @@ class ContinuousBatcher:
     # ------------------------------------------------------------------
     def _refill(self, max_new: int) -> None:
         chunk = self.cfg.prefill_chunk
+        round_cap = self.cfg.prefill_round_tokens
+        round_used = 0
         # (slot, rid, piece tokens, depth before this piece, commits?)
         take: list[tuple[int, int, list[int], int, bool]] = []
         # 1. PREFILLING slots first: their next chunk rides this join, and
@@ -350,6 +432,11 @@ class ContinuousBatcher:
         for slot, rid in enumerate(self.slot_rid):
             if rid is None or not self.slot_pending[slot]:
                 continue
+            if round_cap is not None and round_used >= round_cap:
+                # decode-priority budget: this round already took its
+                # prefill tokens — the continuation rides the next round
+                self.budget_deferrals += 1
+                continue
             pend = self.slot_pending[slot]
             piece = pend[:chunk] if chunk else list(pend)
             depth = self.slot_filled[slot]
@@ -358,9 +445,19 @@ class ContinuousBatcher:
                                        depth + len(piece))
             take.append((slot, rid, piece, depth, len(piece) == len(pend)))
             self.chunk_joins += 1
+            round_used += len(piece)
         # 2. new admissions into free slots (first chunk of each)
-        for slot in [i for i, r in enumerate(self.slot_rid) if r is None]:
+        free = [i for i, r in enumerate(self.slot_rid) if r is None]
+        for fi, slot in enumerate(free):
             if not self.queue:
+                break
+            if round_cap is not None and round_used >= round_cap:
+                # every remaining (free slot, queued request) pair is an
+                # admission this budget pushed to a later round — count
+                # them all so the metric matches the per-slot counting
+                # of deferred continuations above
+                self.budget_deferrals += min(len(free) - fi,
+                                             len(self.queue))
                 break
             cand = self._admit_next(slot, max_new)
             if cand is None:
@@ -372,6 +469,11 @@ class ContinuousBatcher:
             self.slot_pending[slot] = suffix     # trimmed after the join
             take.append((slot, rid, piece, mtoks,
                          len(piece) == len(suffix)))
+            round_used += len(piece)
+            if self.spec_k:
+                # the drafter's lookup corpus: the whole prompt is known
+                # at admission (chunk continuations re-use this row)
+                self.history[slot, :len(p)] = p
         if not take:
             return
         t0 = time.perf_counter()
@@ -404,6 +506,7 @@ class ContinuousBatcher:
         (self.caches, self.tok, self.lengths, self.done, self.remaining,
          self.key, first) = self._join(*join_args)
         first = np.asarray(first)
+        now = time.perf_counter()
         for slot, rid, piece, depth, commit in take:
             new_admission = self.slot_rid[slot] is None
             if new_admission:
@@ -417,6 +520,13 @@ class ContinuousBatcher:
                 continue
             out = [int(first[slot])]
             self.outputs[rid] = out
+            if self._clock0 is not None:
+                self._first_tok_t[rid] = now
+                self.ttfts.append(now - self._clock0)
+            if self.spec_k:
+                # first token at position plen: the current token the
+                # next verify step's tail n-gram ends on
+                self.history[slot, self.slot_filled[slot]] = out[0]
             if (self.eos is not None and out[0] == self.eos) or max_new <= 1:
                 self.results[rid] = out           # retired at birth
                 self.slot_rid[slot] = None
@@ -428,7 +538,19 @@ class ContinuousBatcher:
 
     # ------------------------------------------------------------------
     def _collect(self, emitted: np.ndarray) -> None:
-        steps = emitted.shape[0]
+        """Drain one segment's emitted block into per-request outputs.
+
+        Plain decode emits [steps, B] (one token per live step);
+        speculative decode emits [steps, B, k+1] — each step is a
+        PAD-terminated burst of 1..k+1 committed tokens whose length is
+        that step's accepted advance.  A PAD ends the *step's* burst, not
+        the slot: a live slot keeps committing in later steps, so only
+        retirement (EOS/budget) stops the walk early.
+        """
+        if emitted.ndim == 2:
+            emitted = emitted[:, :, None]
+        steps, _, width = emitted.shape
+        now = time.perf_counter()
         for i, rid in enumerate(self.slot_rid):
             if rid is None:
                 continue
@@ -439,20 +561,44 @@ class ContinuousBatcher:
             out = self.outputs[rid]
             appended = 0
             for t in range(steps):
-                v = int(emitted[t, i])
-                if v == PAD_TOKEN:
+                burst = 0
+                for j in range(width):
+                    v = int(emitted[t, i, j])
+                    if v == PAD_TOKEN:
+                        break
+                    out.append(v)
+                    burst += 1
+                    appended += 1
+                    self.slot_len[i] += 1
+                    if ((self.eos is not None and v == self.eos)
+                            or len(out) >= self.slot_budget[i]):
+                        self.results[rid] = out
+                        self.slot_rid[i] = None
+                        # exact reclamation at this segment edge: private
+                        # pages go back to the free list, registered
+                        # prefix pages park evictable-cached for matches
+                        self._release_slot(i)
+                        if (self._clock0 is not None and len(out) > 1
+                                and rid in self._first_tok_t):
+                            self.tpots.append(
+                                (now - self._first_tok_t[rid])
+                                / (len(out) - 1))
+                        break
+                if self.spec_k and burst:
+                    # one verify step committed ``burst`` tokens: burst-1
+                    # drafts were accepted plus the model's bonus token
+                    self.spec_steps += 1
+                    self.spec_proposed += self.spec_k
+                    self.spec_accepted += burst - 1
+                    self.spec_emitted += burst
+                if self.slot_rid[i] is None:
                     break
-                out.append(v)
-                appended += 1
-                self.slot_len[i] += 1
-                if ((self.eos is not None and v == self.eos)
-                        or len(out) >= self.slot_budget[i]):
-                    self.results[rid] = out
-                    self.slot_rid[i] = None
-                    # exact reclamation at this segment edge: private
-                    # pages go back to the free list, registered prefix
-                    # pages park evictable-cached for future matches
-                    self._release_slot(i)
+                if burst == 0:
+                    # a live slot only emits an empty step once its
+                    # device done-latch fired — every later step of this
+                    # segment is PAD too (the stall check below still
+                    # sees appended == 0 if the latch disagrees with
+                    # host bookkeeping)
                     break
             if appended == 0 and self.slot_rid[i] is not None:
                 raise RuntimeError(
@@ -469,20 +615,27 @@ class ContinuousBatcher:
                 self.results[rid] = []
             return self.results
         steps = max(1, self.cfg.sync_every)
+        if self._clock0 is None:
+            self._clock0 = time.perf_counter()
         # reject oversized requests up front, before anything is dequeued,
-        # so a bad request never drops its queue-mates
+        # so a bad request never drops its queue-mates.  The speculation
+        # window counts toward the worst case: a verify step writes K/V
+        # (and needs table width) up to position lengths + spec_k.
+        window = self.spec_k
         for rid, prompt in self.queue:
-            if len(prompt) + max_new > self.cfg.max_len:
+            if len(prompt) + max_new + window > self.cfg.max_len:
                 raise ValueError(
                     f"request {rid}: prompt {len(prompt)} + max_new "
-                    f"{max_new} exceeds max_len {self.cfg.max_len}")
+                    f"{max_new}"
+                    + (f" + speculation window {window}" if window else "")
+                    + f" exceeds max_len {self.cfg.max_len}")
             if (self.pool is not None
-                    and self.pool.pages_for(len(prompt) + max_new)
+                    and self.pool.pages_for(len(prompt) + max_new + window)
                     > min(self.pool.n_pages, self.pool.max_pages)):
                 raise ValueError(
                     f"request {rid}: needs "
-                    f"{self.pool.pages_for(len(prompt) + max_new)} pages, "
-                    f"pool holds {self.pool.n_pages} "
+                    f"{self.pool.pages_for(len(prompt) + max_new + window)}"
+                    f" pages, pool holds {self.pool.n_pages} "
                     f"(max {self.pool.max_pages}/slot)")
         while self.queue or any(r is not None for r in self.slot_rid):
             self._refill(max_new)
@@ -496,7 +649,19 @@ class ContinuousBatcher:
                     continue
                 break
             self._sample_kv()
-            if self.pool is not None:
+            if self.spec_k:
+                cap = self._page_cap()
+                loop = self._loop(steps, cap)
+                pages = jnp.asarray(self.pool.table[:, :cap])
+                hist = jnp.asarray(self.history)
+                ((self.tok, self.caches, self.lengths, self.done,
+                  self.remaining, self.key, hist), emitted) = loop(
+                    self.params, self.tok, self.caches, self.lengths,
+                    self.done, self.remaining, self.key, hist, pages)
+                # np.array (not asarray): the device export is read-only
+                # and the next join writes prompts into this mirror
+                self.history = np.array(hist)
+            elif self.pool is not None:
                 cap = self._page_cap()
                 loop = self._loop(steps, cap)
                 pages = jnp.asarray(self.pool.table[:, :cap])
@@ -544,12 +709,60 @@ class ContinuousBatcher:
         """Join-segment latency trajectory: every refill that ran a join
         stalls all live slots' decode for its duration — the number
         chunked prefill exists to bound.  ``chunk_joins`` counts the
-        continuation pieces (0 when unchunked)."""
+        continuation pieces (0 when unchunked); ``budget_deferrals``
+        counts prefill pieces pushed to a later round by the
+        decode-priority ``prefill_round_tokens`` cap (0 when uncapped)."""
         jt = self.join_times
         return {"joins": len(jt),
                 "chunk_joins": self.chunk_joins,
+                "budget_deferrals": self.budget_deferrals,
                 "max_join_s": max(jt, default=0.0),
                 "mean_join_s": sum(jt) / len(jt) if jt else 0.0}
+
+    def reset_stats(self) -> None:
+        """Zero the per-wave measurement state — the latency clock and
+        TTFT/TPOT inputs (including the per-request first-token stamps,
+        so a re-submitted rid can never pair with a stale timestamp) and
+        the speculative acceptance counters.  Benchmarks re-submit
+        requests into a *warm* batcher to measure the steady serving
+        state (a fresh instance would re-jit its closures and time
+        compilation); without this reset the second wave's stats would
+        blend with the first's."""
+        self._clock0 = None
+        self._first_tok_t.clear()
+        self.ttfts, self.tpots = [], []
+        self.spec_steps = self.spec_proposed = 0
+        self.spec_accepted = self.spec_emitted = 0
+
+    def spec_stats(self) -> dict:
+        """Self-speculation effectiveness: ``acceptance_rate`` = accepted
+        drafts / proposed drafts, and ``tokens_per_step`` = committed
+        tokens per verify step (1.0 = speculation never helped, k+1 =
+        every draft always accepted).  All zeros with speculation off, so
+        the dict is reportable either way."""
+        return {"enabled": bool(self.spec_k),
+                "k": self.spec_k,
+                "steps": self.spec_steps,
+                "proposed": self.spec_proposed,
+                "accepted": self.spec_accepted,
+                "acceptance_rate": (self.spec_accepted / self.spec_proposed
+                                    if self.spec_proposed else 0.0),
+                "tokens_per_step": (self.spec_emitted / self.spec_steps
+                                    if self.spec_steps else 0.0)}
+
+    def latency_stats(self) -> dict:
+        """Per-request latency trajectory observed at host sync points:
+        TTFT (run start -> the join that sampled the request's first
+        token) and time-per-output-token ((retirement - first token) /
+        (tokens - 1), requests with > 1 token).  Segment syncs quantize
+        both — these are serving-level numbers, not kernel timings."""
+        def pct(a: list[float], q: float) -> float:
+            return float(np.percentile(np.asarray(a), q)) if a else 0.0
+        return {"requests": len(self.ttfts),
+                "ttft_p50_s": pct(self.ttfts, 50),
+                "ttft_p95_s": pct(self.ttfts, 95),
+                "tpot_p50_s": pct(self.tpots, 50),
+                "tpot_p95_s": pct(self.tpots, 95)}
 
     def prefix_stats(self) -> dict:
         """Prefix-cache effectiveness: prefill tokens computed vs skipped

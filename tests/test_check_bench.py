@@ -1,0 +1,77 @@
+"""The bench-trajectory gate must fail loudly, never pass on the
+intersection: a baseline-pinned row missing from the fresh
+BENCH_serve.json is itself a regression (a bench tier silently stopped
+running), named in the failure output.  Also pins the acceptance-rate
+liveness gate (a dead speculative drafter degrades throughput silently)
+and the ``--out`` delta-table artifact."""
+import importlib.util
+import json
+import os
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), os.pardir))
+spec = importlib.util.spec_from_file_location(
+    "check_bench", os.path.join(ROOT, "scripts", "check_bench.py"))
+check_bench = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(check_bench)
+
+
+def _write(tmp_path, name, rows):
+    path = str(tmp_path / name)
+    with open(path, "w") as f:
+        json.dump({"schema": 1, "rows": rows}, f)
+    return path
+
+
+ROW = {"backend": "cpu", "tok_s": 10.0, "kv_util_mean": 0.5,
+       "prefix_hit_rate": 0.0, "prefill_skipped": 0, "chunk_joins": 0,
+       "acceptance_rate": 0.0, "pages_reclaimed": True}
+
+
+def test_all_rows_present_and_healthy_passes(tmp_path):
+    base = _write(tmp_path, "base.json", {"smoke-paged": ROW})
+    fresh = _write(tmp_path, "fresh.json", {"smoke-paged": dict(ROW),
+                                            "extra-local-row": dict(ROW)})
+    assert check_bench.check(fresh, base) == 0
+
+
+def test_missing_baseline_row_fails_with_name(tmp_path, capsys):
+    """A row the baseline pins but the fresh file lacks must fail and
+    name the row — not silently pass on the intersection."""
+    base = _write(tmp_path, "base.json",
+                  {"smoke-paged": ROW, "smoke-spec": ROW})
+    fresh = _write(tmp_path, "fresh.json", {"smoke-paged": dict(ROW)})
+    assert check_bench.check(fresh, base) == 1
+    out = capsys.readouterr().out
+    assert "smoke-spec" in out and "missing" in out
+
+
+def test_acceptance_rate_liveness_gated(tmp_path):
+    """acceptance_rate nonzero in the baseline must stay nonzero."""
+    brow = dict(ROW, acceptance_rate=0.6)
+    base = _write(tmp_path, "base.json", {"smoke-spec": brow})
+    dead = _write(tmp_path, "dead.json",
+                  {"smoke-spec": dict(brow, acceptance_rate=0.0)})
+    live = _write(tmp_path, "live.json",
+                  {"smoke-spec": dict(brow, acceptance_rate=0.2)})
+    assert check_bench.check(dead, base) == 1
+    assert check_bench.check(live, base) == 0
+
+
+def test_throughput_collapse_fails(tmp_path):
+    base = _write(tmp_path, "base.json", {"smoke-paged": ROW})
+    slow = _write(tmp_path, "slow.json",
+                  {"smoke-paged": dict(ROW, tok_s=1.0)})
+    assert check_bench.check(slow, base, tol=0.5) == 1
+    ok = _write(tmp_path, "ok.json", {"smoke-paged": dict(ROW, tok_s=6.0)})
+    assert check_bench.check(ok, base, tol=0.5) == 0
+
+
+def test_out_writes_delta_table(tmp_path):
+    base = _write(tmp_path, "base.json", {"smoke-paged": ROW})
+    fresh = _write(tmp_path, "fresh.json", {"smoke-paged": dict(ROW)})
+    out_path = str(tmp_path / "delta.txt")
+    assert check_bench.check(fresh, base, out_path=out_path) == 0
+    with open(out_path) as f:
+        body = f.read()
+    assert "smoke-paged" in body and "trajectory ok" in body
