@@ -33,9 +33,19 @@ fresh Batcher re-jits its join/segment closures and a compile-dominated
 measurement says nothing about serving throughput — and asserts the
 speculative engine reaches >= 1.5x tokens/sec at a live acceptance rate.
 
+``--optimistic`` serves through optimistic admission (prompt-only pages
+at admit, growth on demand, page-level preemption with recompute-on-
+resume under pool pressure); the smoke forces exhaustion through the
+chaos injector (repro.serve.chaos) and gates ``preemptions > 0`` plus
+``recomputed_ok``, while the full mode's ``preempt_compare`` runs
+reservation vs optimistic at the same undersized pool and asserts the
+optimistic engine holds strictly more live slots at strictly higher KV
+utilization with bit-identical greedy tokens.
+
 Every row now also reports the request-latency trajectory (TTFT p50/p95
-and time-per-output-token p50/p95, measured at host sync points) and the
-speculative ``acceptance_rate`` (0 with speculation off).
+and time-per-output-token p50/p95, measured at host sync points), the
+queue-wait p50/p95, the speculative ``acceptance_rate`` (0 with
+speculation off) and the preemption counters (0 in reservation mode).
 
 ``--smoke`` is the CI sanity mode (~5 s): engine only, asserts a nonzero
 throughput (with ``--paged``: the paged engine, plus 100% page
@@ -70,6 +80,7 @@ import numpy as np  # noqa: E402
 from repro.configs import get_config              # noqa: E402
 from repro.models import param as pm              # noqa: E402
 from repro.models.model_zoo import Model          # noqa: E402
+from repro.serve.chaos import ChaosInjector       # noqa: E402
 from repro.serve.engine import ServeConfig        # noqa: E402
 from repro.serve.scheduler import Batcher         # noqa: E402
 
@@ -106,7 +117,8 @@ def write_bench_json(rows: dict, path: str = BENCH_JSON) -> None:
 
 def full_bench_rows(r: dict, capacity: dict, prefix: dict,
                     chunked: dict | None = None,
-                    spec: dict | None = None) -> dict:
+                    spec: dict | None = None,
+                    preempt: dict | None = None) -> dict:
     """The full-mode trajectory rows, assembled once for both entry
     points (CLI main and the benchmarks.run table hook)."""
     rows = {
@@ -124,6 +136,9 @@ def full_bench_rows(r: dict, capacity: dict, prefix: dict,
     if spec is not None:
         rows["full-spec-on"] = spec["spec-on"]
         rows["full-spec-off"] = spec["spec-off"]
+    if preempt is not None:
+        rows["full-preempt-optimistic"] = preempt["optimistic"]
+        rows["full-preempt-reserve"] = preempt["reserve"]
     return rows
 
 
@@ -200,10 +215,11 @@ def seed_batcher_run(model, params, cfg: ServeConfig, requests, max_new):
     return results
 
 
-def engine_run(model, params, cfg: ServeConfig, requests, max_new):
+def engine_run(model, params, cfg: ServeConfig, requests, max_new,
+               chaos=None):
     """Returns (results, batcher) — the batcher carries the KV-utilization
     samples and, in paged mode, the page pool."""
-    b = Batcher(model, params, cfg)
+    b = Batcher(model, params, cfg, chaos=chaos)
     for rid, p in requests:
         b.submit(rid, p)
     return b.run(max_new=max_new), b
@@ -222,14 +238,17 @@ def bench(arch: str = "qwen2-0.5b", *, batch: int = 4, requests: int = 12,
           smoke: bool = False, paged: bool = False, page_size: int = 16,
           total_pages: int | None = None, prefix_cache: bool = False,
           shared_prefix: int = 0, prefill_chunk: int | None = None,
-          speculate_k: int | None = None, seed: int = 0) -> dict:
+          speculate_k: int | None = None,
+          admission_mode: str = "reserve", chaos=None,
+          seed: int = 0) -> dict:
     cfg = get_config(arch).reduced()
     model = Model(cfg)
     params = pm.unwrap(model.init(jax.random.key(seed)))
     scfg = ServeConfig(max_len=max_len, batch=batch, sync_every=sync_every,
                        paged=paged, page_size=page_size,
                        total_pages=total_pages, prefix_cache=prefix_cache,
-                       prefill_chunk=prefill_chunk, speculate_k=speculate_k)
+                       prefill_chunk=prefill_chunk, speculate_k=speculate_k,
+                       admission_mode=admission_mode)
     if prefix_cache and not shared_prefix:
         shared_prefix = 2 * page_size      # two full shareable pages
     if speculate_k:
@@ -254,13 +273,15 @@ def bench(arch: str = "qwen2-0.5b", *, batch: int = 4, requests: int = 12,
     if not smoke:
         engine_run(model, params, scfg, reqs, max_new)
     t0 = time.perf_counter()
-    got, batcher = engine_run(model, params, scfg, reqs, max_new)
+    got, batcher = engine_run(model, params, scfg, reqs, max_new,
+                              chaos=chaos)
     dt_engine = time.perf_counter() - t0
     toks = sum(len(v) for v in got.values())
     util = batcher.kv_utilization()
     pstats = batcher.prefix_stats()
     jstats = batcher.join_stats()
     sstats = batcher.spec_stats()
+    kstats = batcher.preempt_stats()
     lat = batcher.latency_stats()
     out = {"arch": arch, "tokens": toks, "paged": paged,
            "prefix_cache": prefix_cache,
@@ -275,15 +296,21 @@ def bench(arch: str = "qwen2-0.5b", *, batch: int = 4, requests: int = 12,
            "max_join_s": jstats["max_join_s"],
            "acceptance_rate": sstats["acceptance_rate"],
            "tokens_per_step": sstats["tokens_per_step"],
+           "preemptions": kstats["preemptions"],
+           "recomputed_ok": bool(kstats["recomputed_ok"]),
+           "preempted_token_recompute": kstats["recompute_tokens"],
+           "queue_wait_p50_s": lat["queue_wait_p50_s"],
+           "queue_wait_p95_s": lat["queue_wait_p95_s"],
            "ttft_p50_s": lat["ttft_p50_s"], "ttft_p95_s": lat["ttft_p95_s"],
            "tpot_p50_s": lat["tpot_p50_s"], "tpot_p95_s": lat["tpot_p95_s"]}
     if paged:
         # a drained pool holds no mapped pages: everything is back on the
         # free list except prefix pages parked evictable-cached (zero
-        # reserved cost — reclaimed on pressure)
+        # reserved cost — reclaimed on pressure) and pages a preempted-
+        # then-retired slot left parked dead (allocatable capacity)
         out["pages_reclaimed"] = (
             batcher.pool.free_pages + batcher.pool.cached_pages
-            == batcher.pool.n_pages
+            + batcher.pool.preempted_pages == batcher.pool.n_pages
             and int(batcher.pool.refcount.sum()) == 0)
 
     if not smoke:
@@ -475,6 +502,71 @@ def spec_compare(arch: str = "qwen2-0.5b", *, requests: int = 8,
     return res
 
 
+def preempt_compare(arch: str = "qwen2-0.5b", *, requests: int = 9,
+                    max_new: int = 14, max_len: int = 96,
+                    page_size: int = 8, pool_pages: int = 10,
+                    batch: int = 6, sync_every: int = 4,
+                    seed: int = 1) -> dict:
+    """Reservation vs optimistic admission at the same undersized pool.
+    Reservation admits on the worst case (prompt + max_new + margin), so
+    the tight pool serializes requests whose actual footprints would have
+    fit together; optimistic admission takes prompt-only pages, grows
+    slots on demand, and preempts the policy victim (lowest priority,
+    most pages, least progress) when growth hits pool pressure —
+    recompute-on-resume keeps greedy output bit-identical.  The numbers
+    under test: optimistic must run strictly more concurrent slots at
+    strictly higher mean KV utilization, with at least one preemption
+    actually exercised and every preempted request recomputed to the
+    same tokens."""
+    cfg = get_config(arch).reduced()
+    model = Model(cfg)
+    params = pm.unwrap(model.init(jax.random.key(seed)))
+    rng = np.random.default_rng(seed)
+    reqs = [(rid, rng.integers(0, cfg.vocab,
+                               size=int(rng.integers(8, 14))).tolist())
+            for rid in range(requests)]
+    base = dict(max_len=max_len, batch=batch, sync_every=sync_every,
+                paged=True, page_size=page_size, total_pages=pool_pages)
+
+    res = {}
+    for name, mode in (("reserve", "reserve"), ("optimistic", "optimistic")):
+        scfg = ServeConfig(**base, admission_mode=mode)
+        engine_run(model, params, scfg, reqs, max_new)      # warmup
+        t0 = time.perf_counter()
+        got, b = engine_run(model, params, scfg, reqs, max_new)
+        dt = time.perf_counter() - t0
+        toks = sum(len(v) for v in got.values())
+        util = b.kv_utilization()
+        k = b.preempt_stats()
+        lat = b.latency_stats()
+        res[name] = {"tok_s": toks / dt, "s": dt, "tokens": toks,
+                     "kv_util_mean": util["mean_util"],
+                     "peak_live_slots": util["peak_live_slots"],
+                     "preemptions": k["preemptions"],
+                     "recompute_tokens": k["recompute_tokens"],
+                     "recomputed_ok": bool(k["recomputed_ok"]),
+                     "queue_wait_p50_s": lat["queue_wait_p50_s"],
+                     "queue_wait_p95_s": lat["queue_wait_p95_s"],
+                     **_lat_row(b),
+                     "tokens_by_rid": {r: v for r, v in got.items()}}
+    # recompute-on-resume keeps greedy decode bit-identical to the
+    # never-preempted run — the contract optimism rides on
+    assert (res["optimistic"]["tokens_by_rid"]
+            == res["reserve"]["tokens_by_rid"]), \
+        "preemption/resume changed sampled tokens"
+    for r in res.values():
+        del r["tokens_by_rid"]
+    o, rsv = res["optimistic"], res["reserve"]
+    assert o["preemptions"] > 0, \
+        "undersized-pool workload triggered no preemptions"
+    assert o["recomputed_ok"], "a preempted request never completed"
+    assert o["peak_live_slots"] > rsv["peak_live_slots"], \
+        "optimistic admission did not raise concurrency at equal pool"
+    assert o["kv_util_mean"] > rsv["kv_util_mean"], \
+        "optimistic admission did not raise KV utilization at equal pool"
+    return res
+
+
 def prefill_kernel_timing(arch: str = "qwen2-0.5b", *, b: int = 4,
                           lq: int = 32, pages: int = 64,
                           page_size: int = 16, reps: int = 3) -> dict:
@@ -555,7 +647,15 @@ def run(table) -> None:
               f"({son['tok_s'] / max(soff['tok_s'], 1e-9):.1f}x, accept "
               f"{son['acceptance_rate']:.0%}, "
               f"{son['tokens_per_step']:.1f} tok/step)")
-    write_bench_json(full_bench_rows(r, c, p, ch, sc))
+    pr = preempt_compare()
+    po, prs = pr["optimistic"], pr["reserve"]
+    table.add("serve optimistic admission (undersized pool)",
+              po["s"] * 1e9,
+              f"{po['tok_s']:.1f} tok/s, {po['peak_live_slots']} vs "
+              f"{prs['peak_live_slots']} live slots, KV util "
+              f"{po['kv_util_mean']:.0%} vs {prs['kv_util_mean']:.0%} "
+              f"({po['preemptions']} preemptions)")
+    write_bench_json(full_bench_rows(r, c, p, ch, sc, pr))
 
 
 def main() -> None:
@@ -585,11 +685,21 @@ def main() -> None:
                          "bit-identical output); runs the repetitive-"
                          "continuation workload and reports the "
                          "acceptance rate")
+    ap.add_argument("--optimistic", action="store_true",
+                    help="optimistic admission + page-level preemption "
+                         "(needs --paged): admit on prompt pages only, "
+                         "grow on demand, preempt the policy victim on "
+                         "pool pressure with recompute-on-resume; the "
+                         "smoke forces pool exhaustion via the chaos "
+                         "injector and gates preemptions > 0 + bit-safe "
+                         "recompute, the full mode runs preempt_compare")
     ap.add_argument("--smoke", action="store_true",
                     help="CI sanity: engine only, tiny sizes, ~5s")
     args = ap.parse_args()
     if args.prefix_cache and not args.paged:
         ap.error("--prefix-cache requires --paged")
+    if args.optimistic and not args.paged:
+        ap.error("--optimistic requires --paged")
     if args.speculate is not None:
         if not args.paged:
             ap.error("--speculate requires --paged")
@@ -609,18 +719,36 @@ def main() -> None:
         if chunk is not None:
             # the smoke shrinks the page size; re-align the chunk to it
             chunk = max(smoke_ps, chunk - chunk % smoke_ps)
+        chaos = None
+        if args.optimistic:
+            # forced pool exhaustion right after the first admissions
+            # (mid-growth, while slots still need pages): the injector
+            # raids the free list at round 2 and hands it back at round
+            # 5, guaranteeing at least one preemption even at smoke
+            # sizes; per-round pool/prefix invariant checks ride along
+            chaos = ChaosInjector(exhaust_at={2: 0}, release_at=(5,),
+                                  check_invariants=True)
         r = bench(args.arch, batch=2, requests=4,
                   # speculation needs enough output for the drafter's
-                  # cycle lookup to engage (acceptance_rate is gated > 0)
-                  max_new=12 if args.speculate else 4,
+                  # cycle lookup to engage (acceptance_rate is gated > 0);
+                  # preemption needs enough decode rounds for growth
+                  # demand to hit the chaos-starved pool
+                  max_new=12 if args.speculate else
+                          10 if args.optimistic else 4,
                   # chunked prompts carry a 2*chunk shared prefix — scale
                   # the window so any valid chunk size fits; speculative
                   # requests need prompt + max_new + k to fit
                   max_len=2 * chunk + 32 if chunk else
-                          48 if args.speculate else 32,
+                          48 if args.speculate or args.optimistic else 32,
                   sync_every=4, smoke=True, paged=args.paged,
                   page_size=smoke_ps, prefix_cache=args.prefix_cache,
                   prefill_chunk=chunk, speculate_k=args.speculate,
+                  # tight pool so slot growth actually contends while
+                  # the chaos injector holds pages back
+                  total_pages=10 if args.optimistic else None,
+                  admission_mode=("optimistic" if args.optimistic
+                                  else "reserve"),
+                  chaos=chaos,
                   # at the smoke's tiny default prompts a chunk never
                   # splits — make every prompt long enough to take 2+
                   # bites (the shared prefix also feeds --prefix-cache)
@@ -628,6 +756,11 @@ def main() -> None:
         assert r["engine_tok_s"] > 0, r
         if args.paged:
             assert r["pages_reclaimed"], "retired pages were not reclaimed"
+        if args.optimistic:
+            assert r["preemptions"] > 0, \
+                "chaos-starved pool forced no preemptions"
+            assert r["recomputed_ok"], \
+                "a preempted request did not complete via recompute"
         if args.prefix_cache:
             assert r["prefix_hit_rate"] > 0, \
                 "shared-prompt workload produced no prefix-cache hits"
@@ -639,7 +772,8 @@ def main() -> None:
             assert r["acceptance_rate"] > 0, \
                 "speculative smoke accepted no drafts on the " \
                 "repetitive-continuation workload"
-        mode = ("spec" if args.speculate
+        mode = ("preempt" if args.optimistic
+                else "spec" if args.speculate
                 else "chunked" if chunk
                 else "paged+prefix" if args.prefix_cache
                 else "paged" if args.paged else "dense")
@@ -652,6 +786,9 @@ def main() -> None:
             "chunk_joins": r["chunk_joins"],
             "acceptance_rate": r["acceptance_rate"],
             "tokens_per_step": r["tokens_per_step"],
+            "preemptions": r["preemptions"],
+            "recomputed_ok": r["recomputed_ok"],
+            "preempted_token_recompute": r["preempted_token_recompute"],
             "ttft_p50_s": r["ttft_p50_s"], "ttft_p95_s": r["ttft_p95_s"],
             "tpot_p50_s": r["tpot_p50_s"], "tpot_p95_s": r["tpot_p95_s"],
             "pages_reclaimed": bool(r.get("pages_reclaimed", False))}})
@@ -659,7 +796,8 @@ def main() -> None:
               f"{r['engine_tok_s']:.1f} tok/s, "
               f"KV util {r['kv_util_mean']:.0%}, "
               f"prefix hit rate {r['prefix_hit_rate']:.0%}, "
-              f"acceptance {r['acceptance_rate']:.0%} "
+              f"acceptance {r['acceptance_rate']:.0%}, "
+              f"preemptions {r['preemptions']} "
               f"on {jax.default_backend()}")
         return
     r = bench(args.arch, batch=args.batch, requests=args.requests,
@@ -746,11 +884,22 @@ def main() -> None:
         f"speculative decoding only {spec_x:.2f}x on the repetitive-" \
         "continuation workload (want >= 1.5x)"
 
+    pr = preempt_compare(args.arch)
+    po, prs = pr["optimistic"], pr["reserve"]
+    print(f"[preempt @ undersized pool] reserve: {prs['tok_s']:.1f} tok/s, "
+          f"peak {prs['peak_live_slots']} live slots, "
+          f"KV util {prs['kv_util_mean']:.1%}")
+    print(f"                         optimistic: {po['tok_s']:.1f} tok/s, "
+          f"peak {po['peak_live_slots']} live slots, "
+          f"KV util {po['kv_util_mean']:.1%} "
+          f"({po['preemptions']} preemptions, "
+          f"{po['recompute_tokens']} tokens recomputed)")
+
     kt = prefill_kernel_timing(args.arch)
     print(f"[prefill kernel]  pallas(interpret={kt['backend'] != 'tpu'}): "
           f"{kt['kernel_interpret_s'] * 1e3:.1f}ms / call, xla ref: "
           f"{kt['xla_ref_s'] * 1e3:.1f}ms / call on {kt['backend']}")
-    write_bench_json(full_bench_rows(r, c, pc, ch, sc))
+    write_bench_json(full_bench_rows(r, c, pc, ch, sc, pr))
 
 
 if __name__ == "__main__":

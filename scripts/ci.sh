@@ -62,6 +62,12 @@ echo "== serving smoke (self-speculative decoding) =="
 # got drafts accepted (acceptance_rate > 0) at bit-identical output
 timeout 300 python benchmarks/serve_bench.py --paged --speculate 3 --smoke
 
+echo "== serving smoke (optimistic admission + forced preemption) =="
+# tiny pool + chaos-forced exhaustion (free list raided at round 2,
+# returned at round 5); the smoke asserts at least one slot was actually
+# preempted and every preempted request completed via recompute-on-resume
+timeout 300 python benchmarks/serve_bench.py --paged --optimistic --smoke
+
 echo "== bench trajectory vs committed baseline =="
 # fails on throughput collapse / lost hit rate / dead drafter / broken
 # reclamation, and doubles as the one-line-per-row bench delta summary;

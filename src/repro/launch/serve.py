@@ -29,7 +29,7 @@ def run(arch: str, *, reduced: bool = True, requests: int = 4,
         prefill_chunk: int | None = None,
         prefill_round_tokens: int | None = None,
         speculate_k: int | None = None,
-        speculate_ngram: int = 2) -> dict:
+        speculate_ngram: int = 2, optimistic: bool = False) -> dict:
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -42,7 +42,9 @@ def run(arch: str, *, reduced: bool = True, requests: int = 4,
                        admission=admission, prefill_chunk=prefill_chunk,
                        prefill_round_tokens=prefill_round_tokens,
                        speculate_k=speculate_k,
-                       speculate_ngram=speculate_ngram)
+                       speculate_ngram=speculate_ngram,
+                       admission_mode="optimistic" if optimistic
+                       else "reserve")
     b = Batcher(model, params, scfg, eos_id=eos_id, seed=seed)
     rng = np.random.default_rng(seed)
     system = rng.integers(0, cfg.vocab, size=shared_prefix).tolist()
@@ -75,13 +77,19 @@ def run(arch: str, *, reduced: bool = True, requests: int = 4,
         mode += (f" + speculative k={speculate_k} (acceptance "
                  f"{sstats['acceptance_rate']:.0%}, "
                  f"{sstats['tokens_per_step']:.2f} tok/step)")
+    kstats = b.preempt_stats()
+    if optimistic:
+        mode += (f" + optimistic admission ({kstats['preemptions']} "
+                 f"preemptions, {kstats['recompute_tokens']} tokens "
+                 "recomputed)")
     lat = b.latency_stats()
     print(f"[serve] {len(results)} requests, {toks} tokens in {dt:.1f}s "
           f"({toks / dt:.1f} tok/s on {jax.default_backend()}, {mode}, "
           f"KV util {util['mean_util']:.0%}, TTFT p50 "
           f"{lat['ttft_p50_s'] * 1e3:.0f}ms)")
     return {"results": results, "tok_per_s": toks / dt, "kv_util": util,
-            "prefix": pstats, "spec": sstats, "latency": lat}
+            "prefix": pstats, "spec": sstats, "latency": lat,
+            "preempt": kstats}
 
 
 def main() -> None:
@@ -137,6 +145,12 @@ def main() -> None:
                          "repetitive continuations")
     ap.add_argument("--speculate-ngram", type=int, default=2,
                     help="history-match width of the draft lookup")
+    ap.add_argument("--optimistic", action="store_true",
+                    help="optimistic admission (needs --paged): admit on "
+                         "the prompt's pages only and grow on demand, "
+                         "preempting the lowest-priority / most-pages / "
+                         "least-progress slot on pool pressure "
+                         "(recompute-on-resume, bit-identical output)")
     args = ap.parse_args()
     run(args.arch, reduced=args.reduced, requests=args.requests,
         max_new=args.max_new, batch=args.batch, max_len=args.max_len,
@@ -146,7 +160,8 @@ def main() -> None:
         prefix_cache=args.prefix_cache, shared_prefix=args.shared_prefix,
         admission=args.admission, prefill_chunk=args.prefill_chunk,
         prefill_round_tokens=args.prefill_round_tokens,
-        speculate_k=args.speculate, speculate_ngram=args.speculate_ngram)
+        speculate_k=args.speculate, speculate_ngram=args.speculate_ngram,
+        optimistic=args.optimistic)
 
 
 if __name__ == "__main__":

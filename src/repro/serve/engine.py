@@ -56,6 +56,19 @@ class ServeConfig:
     # the first one whose pages fit when the head does not (higher slot
     # occupancy under mixed prompt sizes, bounded reorder window)
     admission: str = "fifo"
+    # admission sizing (needs paged): "reserve" (default) maps the whole
+    # worst case (prompt + max_new + speculation window) at admission, so
+    # a slot can never run out of pages but the pool runs far under its
+    # real capacity whenever outputs finish early.  "optimistic" maps only
+    # the prompt's pages at admission and grows each slot's table
+    # on demand between decode segments; when growth outruns the pool the
+    # scheduler preempts a victim slot (lowest priority, then most pages,
+    # then least progress), parks its dead pages in the pool's preempted
+    # partition and re-queues it — resume recomputes the KV from the
+    # host-mirrored history through the chunked-prefill join path, with
+    # prefix-cache hits shortcutting the recompute.  Attention-only (a
+    # recurrent state cannot be recomputed from a page-aligned resume).
+    admission_mode: str = "reserve"
     admission_lookahead: int = 8
     # skip-ahead aging: a bypassed head's priority grows with every skip;
     # once it has been skipped ``admission_max_skips`` times it becomes a

@@ -37,6 +37,25 @@ LRU/leaf-first by the registered ``evictor``) — so
                                      \\-> revived (1) -> ...
 
 and ``free + mapped + cached`` always partitions the pool exactly.
+
+Preemption lifecycle (PR 6, :mod:`repro.serve.scheduler` optimistic
+admission): when the scheduler evicts a victim slot under pool pressure,
+:meth:`release` with ``preempt=True`` parks the victim's dead private
+pages (refcount 0, no radix entry) in the **preempted** partition instead
+of the free list.  Their KV is garbage the moment the slot's history is
+the only way back (resume recomputes through the chunked-prefill path),
+so :meth:`_alloc` reclaims them *before* evicting cached prefix pages —
+preempted pages have zero future value, cached ones may still match.  The
+partition exists for accounting: ``check()`` proves preemption conserves
+pages and refcounts instead of leaking them into the free list untracked.
+A fifth **held** partition backs the chaos harness
+(:mod:`repro.serve.chaos`): :meth:`hold` takes free pages out of
+circulation to force pool pressure at a configured round, and
+:meth:`release_held` returns them — so
+
+    free + mapped + cached + preempted + held == n_pages
+
+always, and every non-mapped page carries refcount 0.
 """
 from __future__ import annotations
 
@@ -73,6 +92,12 @@ class KVPool:
         # evictable cached pages: refcount 0 but their KV is still live
         # prefix-cache content — reclaimed on pressure via ``evictor``
         self._cached: set[int] = set()
+        # preempted pages: refcount 0, KV dead (the victim resumes by
+        # recompute) — first in line for reclamation on pressure
+        self._preempted: set[int] = set()
+        # held pages: taken out of circulation by the chaos harness to
+        # force pool pressure; never allocatable until release_held()
+        self._held: set[int] = set()
         self.evictor = None                # set by prefixcache.PrefixCache
         self.refcount = np.zeros((n_pages,), np.int32)
         self.table = np.full((slots, self.max_pages), self.sentinel,
@@ -96,10 +121,22 @@ class KVPool:
         return len(self._cached)
 
     @property
+    def preempted_pages(self) -> int:
+        """Pages parked by slot preemption (refcount 0, KV dead) —
+        reclaimed before anything else on pressure."""
+        return len(self._preempted)
+
+    @property
+    def held_pages(self) -> int:
+        """Pages taken out of circulation by the chaos harness."""
+        return len(self._held)
+
+    @property
     def used_pages(self) -> int:
-        """Pages mapped by live slots (cached pages are *not* used — they
-        cost nothing and are reclaimed on pressure)."""
-        return self.n_pages - len(self._free) - len(self._cached)
+        """Pages mapped by live slots (cached/preempted/held pages are
+        *not* used — they hold no live slot's KV)."""
+        return (self.n_pages - len(self._free) - len(self._cached)
+                - len(self._preempted) - len(self._held))
 
     def cached_page_ids(self) -> list[int]:
         return sorted(self._cached)
@@ -117,7 +154,8 @@ class KVPool:
         total = self.pages_for(tokens)
         if total > self.max_pages:
             return False
-        avail = len(self._free) + len(self._cached - shared)
+        avail = (len(self._free) + len(self._preempted)
+                 + len(self._cached - shared))
         return total - len(shared) <= avail
 
     def slot_pages(self, slot: int) -> list[int]:
@@ -126,9 +164,22 @@ class KVPool:
     # ------------------------------------------------------------------
     # allocate / share / release
     # ------------------------------------------------------------------
+    def _slot_snapshot(self, slot: int) -> str:
+        """Debuggability suffix for allocator errors: the slot's page
+        table plus the pool's partition totals at the failure point."""
+        return (f" [slot {slot} pages={self._slot_pages[slot]}; pool: "
+                f"{len(self._free)} free, {self.used_pages} mapped, "
+                f"{len(self._cached)} cached, "
+                f"{len(self._preempted)} preempted, "
+                f"{len(self._held)} held / {self.n_pages}]")
+
     def _alloc(self, n: int) -> list[int]:
-        """Pop ``n`` pages off the free list, evicting cached pages first
-        when the list runs short (the prefix cache costs zero capacity)."""
+        """Pop ``n`` pages off the free list.  When the list runs short,
+        reclaim preempted pages first (their KV is dead — zero future
+        value), then evict cached prefix pages (theirs may still match)."""
+        while n > len(self._free) and self._preempted:
+            self._free.append(min(self._preempted))
+            self._preempted.discard(self._free[-1])
         if n > len(self._free) and self.evictor is not None:
             self.evictor.evict(n - len(self._free))
         if n > len(self._free):
@@ -145,7 +196,8 @@ class KVPool:
         ``max_len``, and it is returned the moment the slot retires.
         """
         if self._slot_pages[slot]:
-            raise PageError(f"slot {slot} already holds pages")
+            raise PageError(f"slot {slot} already holds pages"
+                            + self._slot_snapshot(slot))
         if tokens <= 0:
             # a zero-page reservation would leave the slot indistinguishable
             # from unreserved (a second reserve would "succeed") — reject it
@@ -154,7 +206,8 @@ class KVPool:
         n = self.pages_for(tokens)
         if n > self.max_pages:
             raise PageError(
-                f"request needs {n} pages > max_pages {self.max_pages}")
+                f"request needs {n} pages > max_pages {self.max_pages}"
+                + self._slot_snapshot(slot))
         pages = self._alloc(n)
         for i, p in enumerate(pages):
             self.refcount[p] += 1
@@ -169,7 +222,8 @@ class KVPool:
         cached pages are revived back to refcount 1.  Free pages cannot be
         shared — their KV is gone."""
         if self._slot_pages[slot]:
-            raise PageError(f"slot {slot} already holds pages")
+            raise PageError(f"slot {slot} already holds pages"
+                            + self._slot_snapshot(slot))
         if not pages:
             raise PageError(f"slot {slot}: share of zero pages")
         if len(pages) > self.max_pages:
@@ -180,7 +234,8 @@ class KVPool:
             raise PageError("shared prefix repeats a page")
         for p in pages:
             if self.refcount[p] == 0 and p not in self._cached:
-                raise PageError(f"page {p} is free, cannot share")
+                raise PageError(f"page {p} is not mapped or cached, "
+                                "cannot share" + self._slot_snapshot(slot))
         for i, p in enumerate(pages):
             self._cached.discard(p)
             self.refcount[p] += 1
@@ -197,7 +252,7 @@ class KVPool:
         if len(held) + n > self.max_pages:
             raise PageError(
                 f"slot {slot}: {len(held)} + {n} pages > max_pages "
-                f"{self.max_pages}")
+                f"{self.max_pages}" + self._slot_snapshot(slot))
         pages = self._alloc(n)
         for i, p in enumerate(pages):
             self.refcount[p] += 1
@@ -206,16 +261,22 @@ class KVPool:
         return pages
 
     def release(self, slot: int,
-                cacheable: frozenset[int] | set[int] = frozenset()) -> int:
+                cacheable: frozenset[int] | set[int] = frozenset(),
+                preempt: bool = False) -> int:
         """Drop ``slot``'s reference on every page it maps; returns the
-        count returned to the free list.
+        count leaving the mapped state under this slot's last reference.
 
         A page re-enters circulation only at refcount zero (prefix sharing
         keeps shared pages alive under their other tables).  Zero-refcount
         pages in ``cacheable`` (i.e. with a live radix entry) park in the
         evictable cached state instead of the free list — resident for
-        future matches, reclaimed on pressure.  Releasing an empty slot is
-        a no-op, but a page leaving the table twice is a hard error.
+        future matches, reclaimed on pressure.  With ``preempt`` the
+        remaining zero-refcount pages park in the **preempted** partition
+        instead of the free list: same allocatability (``_alloc`` reclaims
+        them first), but the accounting distinguishes preemption's page
+        flow so ``check()`` can prove nothing leaked.  Releasing an empty
+        slot is a no-op, but a page leaving the table twice is a hard
+        error.
         """
         pages = self._slot_pages[slot]
         if not pages:
@@ -223,11 +284,15 @@ class KVPool:
         freed = 0
         for p in pages:
             if self.refcount[p] <= 0:
-                raise PageError(f"double free of page {p} (slot {slot})")
+                raise PageError(f"double free of page {p} (slot {slot})"
+                                + self._slot_snapshot(slot))
             self.refcount[p] -= 1
             if self.refcount[p] == 0:
                 if p in cacheable:
                     self._cached.add(p)
+                elif preempt:
+                    self._preempted.add(p)
+                    freed += 1
                 else:
                     self._free.append(p)
                     freed += 1
@@ -244,13 +309,34 @@ class KVPool:
         self._free.append(page)
 
     # ------------------------------------------------------------------
+    # chaos / fault-injection hooks (repro.serve.chaos)
+    # ------------------------------------------------------------------
+    def hold(self, n: int) -> list[int]:
+        """Take up to ``n`` *free* pages out of circulation (chaos-forced
+        pool pressure).  Only the free list is raided — live slots, the
+        prefix cache and the preempted partition are untouched, so the
+        pressure arrives exactly as a smaller effective pool would."""
+        taken = [self._free.pop() for _ in range(min(n, len(self._free)))]
+        self._held.update(taken)
+        return taken
+
+    def release_held(self) -> int:
+        """Return every held page to the free list; returns the count."""
+        n = len(self._held)
+        self._free.extend(sorted(self._held))
+        self._held.clear()
+        return n
+
+    # ------------------------------------------------------------------
     # invariants / metrics
     # ------------------------------------------------------------------
     def check(self) -> None:
         """Assert global allocator consistency (used by the tests):
-        free, mapped and cached pages partition the pool exactly, shared
-        pages' refcounts equal the number of tables naming them, and
-        cached pages carry no references."""
+        free, mapped, cached, preempted and held pages partition the pool
+        exactly, shared pages' refcounts equal the number of tables naming
+        them, refcounts are conserved (their total equals the total table
+        mappings, and every non-mapped page carries zero), and no page
+        sits in two partitions at once."""
         counts: dict[int, int] = {}
         for pages in self._slot_pages:
             for p in pages:
@@ -262,23 +348,41 @@ class KVPool:
         free = set(self._free)
         if len(free) != len(self._free):
             raise PageError("free list contains duplicates")
-        if free & counts.keys():
-            raise PageError("a page is both free and mapped")
-        if self._cached & free:
-            raise PageError("a page is both cached and free")
-        if self._cached & counts.keys():
-            raise PageError("a page is both cached and mapped")
-        for p in self._cached:
-            if self.refcount[p] != 0:
-                raise PageError(
-                    f"cached page {p} has refcount {self.refcount[p]}")
-        if len(free) + len(counts) + len(self._cached) != self.n_pages:
-            raise PageError("free + mapped + cached pages != pool")
+        parts = {"free": free, "cached": self._cached,
+                 "preempted": self._preempted, "held": self._held}
+        names = list(parts)
+        for i, a in enumerate(names):
+            if parts[a] & counts.keys():
+                raise PageError(f"a page is both {a} and mapped")
+            for b in names[i + 1:]:
+                if parts[a] & parts[b]:
+                    raise PageError(f"a page is both {a} and {b}")
+            for p in parts[a]:
+                if self.refcount[p] != 0:
+                    raise PageError(f"{a} page {p} has refcount "
+                                    f"{self.refcount[p]}")
+        if (len(free) + len(counts) + len(self._cached)
+                + len(self._preempted) + len(self._held) != self.n_pages):
+            raise PageError(
+                "free + mapped + cached + preempted + held pages != pool")
+        # refcount conservation: the refcount total is exactly the total
+        # number of table mappings (negatives cancelling positives, or a
+        # stray count on an unmapped page, would slip the per-page checks
+        # above only via a bookkeeping structure they don't look at)
+        if (self.refcount < 0).any():
+            raise PageError("negative refcount")
+        total_refs = int(self.refcount.sum())
+        total_maps = sum(len(ps) for ps in self._slot_pages)
+        if total_refs != total_maps:
+            raise PageError(f"refcount total {total_refs} != "
+                            f"{total_maps} table mappings")
         for slot, pages in enumerate(self._slot_pages):
             if list(self.table[slot, :len(pages)]) != pages:
-                raise PageError(f"table row {slot} out of sync")
+                raise PageError(f"table row {slot} out of sync"
+                                + self._slot_snapshot(slot))
             if not (self.table[slot, len(pages):] == self.sentinel).all():
-                raise PageError(f"table row {slot} has stale tail entries")
+                raise PageError(f"table row {slot} has stale tail entries"
+                                + self._slot_snapshot(slot))
 
     def utilization(self, live_tokens: int) -> float:
         """live tokens / token capacity mapped by live slots (1.0 = no

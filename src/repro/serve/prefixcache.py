@@ -190,6 +190,12 @@ class PrefixCache:
                 seen.add(child.page)
                 cached = pool.is_cached(child.page)
                 mapped = int(pool.refcount[child.page]) > 0
+                if child.page in pool._preempted or child.page in pool._held:
+                    # a preemption must park registered pages as evictable
+                    # cached (their KV stays matchable); the preempted /
+                    # held partitions are for dead private pages only
+                    raise PageError(f"registered page {child.page} is in "
+                                    "the preempted/held partition")
                 if not (cached or mapped):
                     raise PageError(f"registered page {child.page} is "
                                     "neither mapped nor cached")

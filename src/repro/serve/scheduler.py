@@ -125,6 +125,47 @@ scheduler's part of the contract:
   walks each step's committed burst (PAD-terminated) with the same
   EOS/budget retirement rules, and the per-step committed counts feed
   ``spec_stats()`` (acceptance rate = accepted drafts / proposed).
+
+Optimistic admission + page-level preemption
+(``cfg.admission_mode="optimistic"``, needs paged; attention-only):
+reservation admission maps the full worst case (prompt + max_new + k) at
+join time, so the pool runs far under its true capacity whenever outputs
+finish early — ``kv_util_mean`` is the gap.  Optimistic admission maps
+only the *prompt's* pages at join time and grows each decoding slot's
+table on demand between segments (``_ensure_decode_pages``: cover the
+segment's worst-case advance, ``steps * (k+1)`` tokens, capped by the
+slot's total budget).  When growth outruns the pool, the scheduler picks
+a **victim** under a deterministic policy — lowest priority class
+(``submit(..., priority=)``), then most pages mapped, then least decode
+progress, then lowest slot id — releases the victim's pages (dead
+private pages park in the pool's *preempted* partition, registered
+prefix pages stay evictable-cached) and re-queues it at the queue head:
+
+    ... -> DECODING --pool pressure--> PREEMPTED (off device, pages
+    released, host history keeps prompt + committed tokens) --re-admit-->
+    PREFILLING/DECODING (recompute KV from history via the ordinary
+    chunked-prefill join at absolute depth) --> ... -> retired
+
+Resume is recompute-on-resume: the re-queued "prompt" is the original
+prompt plus every committed token, so the ordinary suffix-prefill path
+rebuilds the KV bit-exactly and the join's first sampled token is the
+next token the uninterrupted run would have produced (greedy parity).
+Pages the victim had covered are registered in the radix tree at
+preemption (generated-token pages are immutable full pages too), so with
+the prefix cache on the resume usually *matches* most of its history and
+recomputes only a page-aligned tail.  No-livelock: every preemption
+charges the request's preempt count, and at ``admission_max_skips`` the
+request becomes an admission **barrier** (the PR 4 aging mechanism) —
+nothing joins past it, the pool drains toward it, and since the victim
+policy always evicts the least-progressed slot last, some slot always
+runs to retirement, so every preempted request eventually completes.
+
+Chaos injection (``chaos=``, repro.serve.chaos): a deterministic
+round-keyed injector can force pool exhaustion (``KVPool.hold`` on the
+free list), override victim selection, and simulate slot failure
+mid-decode (handled as a preemption — recompute-on-resume *is* the
+recovery path), with optional per-round ``KVPool.check()`` /
+``PrefixCache.check()`` invariant sweeps.
 """
 from __future__ import annotations
 
@@ -138,7 +179,7 @@ import numpy as np
 from .engine import (PAD_TOKEN, ServeConfig, jit_decode_loop, jit_join,
                      jit_paged_decode_loop, jit_paged_join,
                      jit_spec_decode_loop)
-from .kvpool import KVPool
+from .kvpool import KVPool, PageError
 from .prefixcache import PrefixCache
 from ..models.model_zoo import Model
 
@@ -146,6 +187,13 @@ from ..models.model_zoo import Model
 def _pow2_bucket(n: int, lo: int = 16, hi: int | None = None) -> int:
     b = max(lo, 1 << max(0, n - 1).bit_length())
     return min(b, hi) if hi is not None else b
+
+
+def _pct(a: list[float], q: float) -> float:
+    """Percentile guarded against empty inputs — the single helper every
+    stats method shares (0.0 on no samples, matching the rest of the
+    reportable-either-way stats contract)."""
+    return float(np.percentile(np.asarray(a), q)) if a else 0.0
 
 
 class ContinuousBatcher:
@@ -158,7 +206,7 @@ class ContinuousBatcher:
     """
 
     def __init__(self, model: Model, params, cfg: ServeConfig,
-                 eos_id: int | None = None, seed: int = 0):
+                 eos_id: int | None = None, seed: int = 0, chaos=None):
         self.model, self.params, self.cfg = model, params, cfg
         self.eos = eos_id
         self.queue: collections.deque[tuple[int, list[int]]] = \
@@ -166,6 +214,27 @@ class ContinuousBatcher:
         self.results: dict[int, list[int]] = {}
         if cfg.admission not in ("fifo", "skip-ahead"):
             raise ValueError(f"unknown admission policy {cfg.admission!r}")
+        if cfg.admission_mode not in ("reserve", "optimistic"):
+            raise ValueError(
+                f"unknown admission mode {cfg.admission_mode!r} "
+                "(expected 'reserve' or 'optimistic')")
+        if cfg.admission_mode == "optimistic":
+            from ..configs.base import BlockKind
+            if not cfg.paged:
+                raise ValueError(
+                    "admission_mode='optimistic' requires paged=True "
+                    "(on-demand growth and preemption move pages through "
+                    "the pool)")
+            if any(s.kind is BlockKind.SSM
+                   for s in model.cfg.resolved_segments()):
+                raise ValueError(
+                    "optimistic admission is attention-only: preempting a "
+                    "hybrid SSM slot would discard a recurrent state that "
+                    "recompute-on-resume cannot rebuild from paged KV")
+        self.chaos = chaos
+        if chaos is not None and not cfg.paged:
+            raise ValueError("chaos injection requires paged=True (its "
+                             "faults move pages through the pool)")
         if cfg.prefill_chunk is not None:
             from ..configs.base import BlockKind
             if not cfg.paged:
@@ -283,12 +352,39 @@ class ContinuousBatcher:
         self._first_tok_t: dict[int, float] = {}
         self.ttfts: list[float] = []
         self.tpots: list[float] = []
+        # queue-wait trajectory: submit (or preemption) -> admission
+        self._submit_t: dict[int, float] = {}
+        self.queue_waits: list[float] = []
+        # optimistic admission / preemption state: per-request priority
+        # class (victim policy evicts lowest first), the slot's total
+        # token ceiling (prompt + remaining budget + spec window — what
+        # on-demand growth may cover), how many committed tokens predate
+        # the slot's current admission (a re-preempted slot's resume
+        # prompt is slot_prompt + outputs[slot_prior:]), and the rids
+        # currently living between preemption and retirement
+        self.req_priority: dict[int, int] = {}
+        self.slot_max_tokens = [0] * b
+        self.slot_prior = [0] * b
+        self._resumed: set[int] = set()
+        self._preempt_counts: dict[int, int] = {}
+        self.preempted_rids: set[int] = set()
+        self.preempt_events: list[tuple[int, int, int, str]] = []
+        self.preemptions = 0
+        self.preempted_token_recompute = 0
+        # scheduling-round counter: the chaos injector keys on it
+        self.round = 0
 
     # ------------------------------------------------------------------
-    def submit(self, rid: int, prompt: list[int]) -> None:
+    def submit(self, rid: int, prompt: list[int],
+               priority: int = 0) -> None:
+        """Queue a request.  ``priority`` is its SLO class for the
+        preemption victim policy — higher values are evicted later
+        (ties fall back to most-pages / least-progress)."""
         if not prompt:
             raise ValueError("empty prompt")
         self.queue.append((rid, list(prompt)))
+        self.req_priority[rid] = priority
+        self._submit_t[rid] = time.perf_counter()
 
     # ------------------------------------------------------------------
     def _loop(self, steps: int, cap: int | None):
@@ -325,6 +421,13 @@ class ContinuousBatcher:
             return self.cfg.max_pages
         return _pow2_bucket(max(live), lo=2, hi=self.cfg.max_pages)
 
+    def _note_admitted(self, rid: int) -> None:
+        """Close the request's queue-wait interval (opened at submit and
+        re-opened at each preemption)."""
+        t0 = self._submit_t.pop(rid, None)
+        if t0 is not None:
+            self.queue_waits.append(time.perf_counter() - t0)
+
     # ------------------------------------------------------------------
     def _admit_next(self, slot: int, max_new: int):
         """Pop and reserve the next admissible queued request for ``slot``.
@@ -343,19 +446,30 @@ class ContinuousBatcher:
         if self.pool is None:
             rid, p = self.queue.popleft()
             self.admit_order.append(rid)
+            self._note_admitted(rid)
             return rid, p, 0
+        optimistic = self.cfg.admission_mode == "optimistic"
         window = 1
         if self.cfg.admission == "skip-ahead":
             window = min(len(self.queue), self.cfg.admission_lookahead)
         for qi in range(window):
             rid, p = self.queue[qi]
+            # a resume's "prompt" already contains ``prior`` committed
+            # tokens, so only the *remaining* budget counts toward its
+            # worst case — the total never exceeds the original admission
+            prior = (len(self.outputs.get(rid, ()))
+                     if rid in self._resumed else 0)
+            ceiling = len(p) + (max_new - prior) + self.spec_k
             matched: list[int] = []
             mtoks = 0
             if self.prefix is not None:
                 matched, mtoks = self.prefix.match(p)
-            # worst case covers the speculation window too: a verify step
-            # at the budget edge still writes K/V up to lengths + spec_k
-            if not self.pool.can_admit(len(p) + max_new + self.spec_k,
+            # reserve mode admits the worst case up front (the spec
+            # window counts: a verify at the budget edge writes K/V up
+            # to lengths + spec_k); optimistic mode admits on the
+            # prompt's pages only and grows on demand between segments
+            admit_tokens = len(p) if optimistic else ceiling
+            if not self.pool.can_admit(admit_tokens,
                                        shared_pages=matched):
                 if self._skips.get(rid, 0) >= self.cfg.admission_max_skips:
                     # aged out: this blocked request is now a barrier —
@@ -369,14 +483,17 @@ class ContinuousBatcher:
                     self._skips.get(self.queue[prev][0], 0) + 1
             self._skips.pop(rid, None)
             self.admit_order.append(rid)
-            total = self.pool.pages_for(len(p) + max_new + self.spec_k)
+            self._note_admitted(rid)
+            self.slot_max_tokens[slot] = ceiling
+            total = self.pool.pages_for(admit_tokens)
             if matched:
                 # refcounts go above 1 here: the prefix chain is mapped
                 # into this slot's table on top of its other references
                 self.pool.share(slot, matched)
-                self.pool.extend(slot, total - len(matched))
+                if total > len(matched):
+                    self.pool.extend(slot, total - len(matched))
             else:
-                self.pool.reserve(slot, len(p) + max_new + self.spec_k)
+                self.pool.reserve(slot, admit_tokens)
             if self.prefix is not None:
                 # register the pages the *first chunk* will have written
                 # by the end of this refill round's join, so queue-mates
@@ -417,6 +534,135 @@ class ContinuousBatcher:
         self.slot_pending[slot] = []
         self.slot_prompt[slot] = None
         self.slot_filled[slot] = 0
+        self.slot_prior[slot] = 0
+        self.slot_max_tokens[slot] = 0
+
+    # ------------------------------------------------------------------
+    # page-level preemption (optimistic admission / chaos slot failure)
+    # ------------------------------------------------------------------
+    def _preempt_slot(self, slot: int, reason: str = "pressure") -> None:
+        """Evict a live slot at a segment boundary: register its covered
+        pages in the radix tree (so the resume can shortcut recompute),
+        release its pages (unregistered ones park in the pool's preempted
+        partition), latch its device row done, and re-queue the request
+        at the queue head with prompt = everything committed so far —
+        the ordinary chunked-prefill path then recomputes the KV
+        bit-exactly (recompute-on-resume)."""
+        rid = self.slot_rid[slot]
+        if rid is None:
+            raise RuntimeError(f"preempt of empty slot {slot}")
+        prompt = self.slot_prompt[slot]
+        if self.slot_pending[slot]:
+            # PREFILLING: no tokens committed under *this* admission yet;
+            # the resume replays the same (resume-)prompt from the top
+            resident = self.slot_filled[slot]
+            resume = list(prompt)
+            known = prompt[:resident]
+        else:
+            # DECODING: resume prompt = this admission's prompt plus the
+            # tokens committed since (``slot_prior`` marks the split, so
+            # a second preemption never duplicates older outputs).  The
+            # last committed token has no KV yet (it is the *input* of
+            # the next step), hence ``known`` stops one short.
+            out = self.outputs[rid]
+            resident = self.slot_len[slot]
+            resume = list(prompt) + out[self.slot_prior[slot]:]
+            known = resume[:-1]
+        if self.prefix is not None and resident:
+            # generated-token pages are immutable full pages of real KV:
+            # registering them lets the resume *match* its own history
+            # and recompute only the page-aligned tail
+            self._register_covered(slot, known, resident)
+        cacheable = frozenset()
+        if self.prefix is not None:
+            cacheable = self.prefix.registered_pages(
+                self.pool.slot_pages(slot))
+        self.pool.release(slot, cacheable=cacheable, preempt=True)
+        self.slot_rid[slot] = None
+        self.slot_pending[slot] = []
+        self.slot_prompt[slot] = None
+        self.slot_filled[slot] = 0
+        self.slot_len[slot] = 0
+        self.slot_prior[slot] = 0
+        self.slot_max_tokens[slot] = 0
+        # freeze the abandoned device row: done-latched rows stop
+        # sampling and growing their cache, and their table row is the
+        # OOB sentinel after release, so any residual write drops
+        self.done = self.done.at[slot].set(True)
+        self.remaining = self.remaining.at[slot].set(0)
+        self.queue.appendleft((rid, resume))
+        self._resumed.add(rid)
+        self.preempted_rids.add(rid)
+        self.preemptions += 1
+        self._submit_t[rid] = time.perf_counter()   # re-open queue wait
+        n = self._preempt_counts[rid] = self._preempt_counts.get(rid, 0) + 1
+        if n >= max(1, self.cfg.admission_max_skips):
+            # thrash bound: an often-preempted request becomes an
+            # admission barrier (the skip-ahead aging mechanism) and the
+            # victim policy marks it protected — the pool drains toward
+            # it, so it cannot be starved by re-admissions
+            self._skips[rid] = self.cfg.admission_max_skips
+        self.preempt_events.append((self.round, rid, slot, reason))
+
+    def _pick_victim(self, requester: int | None = None) -> int | None:
+        """Deterministic victim policy over live slots: barrier-protected
+        last, then lowest priority class, most pages mapped, least decode
+        progress, lowest slot id.  A chaos override (if armed) replaces
+        the policy for this one decision."""
+        cands = [i for i, r in enumerate(self.slot_rid) if r is not None]
+        if not cands:
+            return None
+        if self.chaos is not None:
+            v = self.chaos.pick_victim(self, list(cands))
+            if v is not None:
+                return v
+        max_skips = max(1, self.cfg.admission_max_skips)
+
+        def key(i: int):
+            rid = self.slot_rid[i]
+            protected = self._preempt_counts.get(rid, 0) >= max_skips
+            progress = (0 if self.slot_pending[i]
+                        else len(self.outputs.get(rid, ())))
+            return (protected, self.req_priority.get(rid, 0),
+                    -len(self.pool.slot_pages(i)), progress, i)
+        return min(cands, key=key)
+
+    def _ensure_decode_pages(self, steps: int) -> None:
+        """Optimistic mode: before a decode segment, grow every decoding
+        slot's page table to cover the segment's worst-case advance
+        (``steps * (spec_k + 1)`` tokens, capped by the slot's total
+        budget), preempting victims when the pool cannot cover it.
+        Highest-priority slots grow first, so pressure evicts in policy
+        order; a slot picked as its own victim simply stops (its demand
+        left with it)."""
+        if self.pool is None or self.cfg.admission_mode != "optimistic":
+            return
+        adv = steps * (self.spec_k + 1)
+        order = sorted(
+            (i for i, r in enumerate(self.slot_rid)
+             if r is not None and not self.slot_pending[i]),
+            key=lambda i: (-self.req_priority.get(self.slot_rid[i], 0), i))
+        for slot in order:
+            if self.slot_rid[slot] is None:
+                continue                  # evicted by an earlier grow
+            cover = min(self.slot_len[slot] + adv,
+                        self.slot_max_tokens[slot])
+            need = (self.pool.pages_for(cover)
+                    - len(self.pool.slot_pages(slot)))
+            if need <= 0:
+                continue
+            while need > (self.pool.free_pages + self.pool.preempted_pages
+                          + self.pool.cached_pages):
+                victim = self._pick_victim(requester=slot)
+                if victim is None:
+                    raise PageError(
+                        f"cannot grow slot {slot} by {need} pages: no "
+                        "live victim left and the pool cannot cover it")
+                self._preempt_slot(victim, reason="pressure")
+                if victim == slot:
+                    break
+            if self.slot_rid[slot] is not None:
+                self.pool.extend(slot, need)
 
     # ------------------------------------------------------------------
     def _refill(self, max_new: int) -> None:
@@ -488,17 +734,28 @@ class ContinuousBatcher:
         prompts = np.zeros((b, width), np.int32)
         plens = np.ones((b,), np.int32)
         prefix_lens = np.zeros((b,), np.int32)
-        for slot, _, piece, depth, commit in take:
+        budgets = np.full((b,), max_new, np.int32)
+        for slot, rid, piece, depth, commit in take:
             join_mask[slot] = True
             commit_mask[slot] = commit
             prompts[slot, :len(piece)] = piece
             plens[slot] = len(piece)
             prefix_lens[slot] = depth
             self.prefill_computed += len(piece)
+            if rid in self._resumed:
+                # prefill spent re-admitting a preempted request — the
+                # direct cost of recompute-on-resume
+                self.preempted_token_recompute += len(piece)
+                # the resume's device budget is only the *remaining*
+                # tokens: its prompt already carries the committed ones,
+                # so the done-latch must fire at the original total
+                prior = len(self.outputs.get(rid, ()))
+                if prior:
+                    budgets[slot] = max(1, max_new - prior)
         join_args = (self.params, self.caches, self.tok, self.lengths,
                      self.done, self.remaining, jnp.asarray(join_mask),
                      jnp.asarray(prompts), jnp.asarray(plens),
-                     jnp.full((b,), max_new, jnp.int32), self.key)
+                     jnp.asarray(budgets), self.key)
         if self.pool is not None:
             join_args += (jnp.asarray(self.pool.table),
                           jnp.asarray(prefix_lens),
@@ -518,19 +775,37 @@ class ContinuousBatcher:
                 self.slot_rid[slot] = rid         # PREFILLING: occupied,
                 self.slot_budget[slot] = max_new  # frozen on device
                 continue
-            out = [int(first[slot])]
-            self.outputs[rid] = out
-            if self._clock0 is not None:
+            tokv = int(first[slot])
+            prev = self.outputs.get(rid) if rid in self._resumed else None
+            # ``slot_prior``: committed tokens that predate this
+            # admission — a later preemption resumes from slot_prompt +
+            # outputs[prior:], never duplicating older tokens
+            self.slot_prior[slot] = len(prev) if prev is not None else 0
+            if prev is not None:
+                prev.append(tokv)                 # resume: keep history
+                out = prev
+            else:
+                out = [tokv]
+                self.outputs[rid] = out
+            if self._clock0 is not None and rid not in self._first_tok_t:
+                # a resumed request keeps its original first-token stamp
                 self._first_tok_t[rid] = now
                 self.ttfts.append(now - self._clock0)
             if self.spec_k:
-                # first token at position plen: the current token the
+                # newest token at position filled: the current token the
                 # next verify step's tail n-gram ends on
-                self.history[slot, self.slot_filled[slot]] = out[0]
-            if (self.eos is not None and out[0] == self.eos) or max_new <= 1:
-                self.results[rid] = out           # retired at birth
+                self.history[slot, self.slot_filled[slot]] = tokv
+            if ((self.eos is not None and tokv == self.eos)
+                    or len(out) >= max_new):
+                self.results[rid] = out           # retired at commit
                 self.slot_rid[slot] = None
+                self._resumed.discard(rid)
+                self._preempt_counts.pop(rid, None)
                 self._release_slot(slot)
+                if (self._clock0 is not None and len(out) > 1
+                        and rid in self._first_tok_t):
+                    self.tpots.append((now - self._first_tok_t[rid])
+                                      / (len(out) - 1))
             else:
                 self.slot_rid[slot] = rid
                 self.slot_budget[slot] = max_new
@@ -574,6 +849,8 @@ class ContinuousBatcher:
                             or len(out) >= self.slot_budget[i]):
                         self.results[rid] = out
                         self.slot_rid[i] = None
+                        self._resumed.discard(rid)
+                        self._preempt_counts.pop(rid, None)
                         # exact reclamation at this segment edge: private
                         # pages go back to the free list, registered
                         # prefix pages park evictable-cached for matches
@@ -623,6 +900,11 @@ class ContinuousBatcher:
         # (and needs table width) up to position lengths + spec_k.
         window = self.spec_k
         for rid, prompt in self.queue:
+            if rid in self._resumed:
+                # a resume's prompt carries committed tokens, so the
+                # naive formula over-counts; it was validated (and its
+                # total never grows) at its original admission
+                continue
             if len(prompt) + max_new + window > self.cfg.max_len:
                 raise ValueError(
                     f"request {rid}: prompt {len(prompt)} + max_new "
@@ -637,7 +919,11 @@ class ContinuousBatcher:
                     f"{self.pool.pages_for(len(prompt) + max_new + window)}"
                     f" pages, pool holds {self.pool.n_pages} "
                     f"(max {self.pool.max_pages}/slot)")
+        idle_rounds = 0
         while self.queue or any(r is not None for r in self.slot_rid):
+            self.round += 1
+            if self.chaos is not None:
+                self.chaos.on_round(self)
             self._refill(max_new)
             if not any(r is not None and not self.slot_pending[i]
                        for i, r in enumerate(self.slot_rid)):
@@ -646,8 +932,28 @@ class ContinuousBatcher:
                 # advances their chunks — a decode segment would only
                 # burn a scan on all-done rows
                 if self.queue or any(r is not None for r in self.slot_rid):
+                    if not any(r is not None for r in self.slot_rid):
+                        # queue blocked with zero live slots: admission
+                        # must succeed within a bounded number of rounds
+                        # (only a chaos hold can defer it) — a spin past
+                        # the bound is a deadlock, not a wait
+                        idle_rounds += 1
+                        if idle_rounds > 100_000:
+                            raise RuntimeError(
+                                "admission stalled: queue non-empty, no "
+                                "live slots, and 100000 rounds without "
+                                "progress (pages held outside the pool?)")
                     continue
                 break
+            idle_rounds = 0
+            # optimistic admission: make every decoding slot's page table
+            # cover this segment's worst-case advance, preempting on
+            # pressure — may evict every decoding slot (chaos holds), in
+            # which case the next refill round re-admits from the queue
+            self._ensure_decode_pages(steps)
+            if not any(r is not None and not self.slot_pending[i]
+                       for i, r in enumerate(self.slot_rid)):
+                continue
             self._sample_kv()
             if self.spec_k:
                 cap = self._page_cap()
@@ -731,6 +1037,7 @@ class ContinuousBatcher:
         self._clock0 = None
         self._first_tok_t.clear()
         self.ttfts, self.tpots = [], []
+        self.queue_waits = []
         self.spec_steps = self.spec_proposed = 0
         self.spec_accepted = self.spec_emitted = 0
 
@@ -753,16 +1060,40 @@ class ContinuousBatcher:
     def latency_stats(self) -> dict:
         """Per-request latency trajectory observed at host sync points:
         TTFT (run start -> the join that sampled the request's first
-        token) and time-per-output-token ((retirement - first token) /
-        (tokens - 1), requests with > 1 token).  Segment syncs quantize
-        both — these are serving-level numbers, not kernel timings."""
-        def pct(a: list[float], q: float) -> float:
-            return float(np.percentile(np.asarray(a), q)) if a else 0.0
+        token), time-per-output-token ((retirement - first token) /
+        (tokens - 1), requests with > 1 token), and queue wait (submit —
+        or preemption — to admission; a preempted request contributes one
+        wait per admission).  Segment syncs quantize all of these —
+        serving-level numbers, not kernel timings.  Preemption counters
+        ride along so one dict describes what the request latencies paid
+        for (shared empty-guarded percentile helper: module ``_pct``)."""
         return {"requests": len(self.ttfts),
-                "ttft_p50_s": pct(self.ttfts, 50),
-                "ttft_p95_s": pct(self.ttfts, 95),
-                "tpot_p50_s": pct(self.tpots, 50),
-                "tpot_p95_s": pct(self.tpots, 95)}
+                "ttft_p50_s": _pct(self.ttfts, 50),
+                "ttft_p95_s": _pct(self.ttfts, 95),
+                "tpot_p50_s": _pct(self.tpots, 50),
+                "tpot_p95_s": _pct(self.tpots, 95),
+                "queue_wait_p50_s": _pct(self.queue_waits, 50),
+                "queue_wait_p95_s": _pct(self.queue_waits, 95),
+                "preemptions": self.preemptions,
+                "preempted_token_recompute": self.preempted_token_recompute}
+
+    def preempt_stats(self) -> dict:
+        """Preemption effectiveness and liveness: how many evictions
+        happened, how much prefill was re-spent resuming them, and
+        ``recomputed_ok`` — True iff every request that was ever
+        preempted has retired with a result (vacuously True with no
+        preemptions; the liveness gate pairs it with
+        ``preemptions > 0``)."""
+        ok = all(rid in self.results and rid not in self._resumed
+                 for rid in self.preempted_rids)
+        return {"enabled": self.cfg.admission_mode == "optimistic",
+                "preemptions": self.preemptions,
+                "preempted_requests": len(self.preempted_rids),
+                "recompute_tokens": self.preempted_token_recompute,
+                "slot_failures": (self.chaos.slot_failures
+                                  if self.chaos is not None else 0),
+                "recomputed_ok": ok,
+                "events": list(self.preempt_events)}
 
     def prefix_stats(self) -> dict:
         """Prefix-cache effectiveness: prefill tokens computed vs skipped

@@ -192,6 +192,99 @@ def test_extend_validates_bounds():
 
 
 # --------------------------------------------------------------------------
+# preemption partition: release(preempt=True), reclaim-first alloc, chaos
+# holds, and the refcount-conservation / snapshot debuggability checks
+# --------------------------------------------------------------------------
+
+def test_release_preempt_parks_pages_and_alloc_reclaims_them():
+    pool = KVPool(n_pages=6, page_size=4, slots=2)
+    pool.reserve(0, 12)                  # 3 pages
+    assert pool.release(0, preempt=True) == 3
+    assert pool.preempted_pages == 3 and pool.free_pages == 3
+    assert pool.used_pages == 0          # preempted pages cost no capacity
+    pool.check()
+    # preempted pages are admission capacity (their KV is dead) ...
+    assert pool.can_admit(24)
+    # ... and a reservation larger than the free list reclaims them
+    # before raising
+    assert len(pool.reserve(1, 24)) == 6
+    assert pool.preempted_pages == 0
+    pool.check()
+
+
+def test_release_preempt_keeps_registered_pages_cached():
+    """Preemption parks only *dead* pages: registered prefix pages still
+    go to the evictable cached state, where a resume can match them."""
+    pool = KVPool(n_pages=6, page_size=4, slots=2)
+    pages = pool.reserve(0, 12)
+    assert pool.release(0, cacheable=frozenset(pages[:2]),
+                        preempt=True) == 1
+    assert pool.cached_pages == 2 and pool.preempted_pages == 1
+    pool.check()
+
+
+def test_release_preempt_respects_shared_refcounts():
+    pool = KVPool(n_pages=8, page_size=4, slots=2)
+    prefix = pool.reserve(0, 8)
+    pool.share(1, prefix)
+    assert pool.release(0, preempt=True) == 0
+    assert pool.preempted_pages == 0     # still mapped under slot 1
+    assert (pool.refcount[prefix] == 1).all()
+    pool.check()
+
+
+def test_hold_and_release_held():
+    pool = KVPool(n_pages=4, page_size=2, slots=2)
+    pool.reserve(0, 2)                   # 1 page mapped
+    assert len(pool.hold(2)) == 2
+    assert pool.held_pages == 2 and pool.free_pages == 1
+    pool.check()
+    # held pages are NOT admission capacity (unlike preempted ones)
+    assert pool.can_admit(2) and not pool.can_admit(4)
+    with pytest.raises(PageError):
+        pool.reserve(1, 6)               # 3 pages, only 1 reachable
+    assert pool.release_held() == 2
+    assert pool.held_pages == 0 and pool.free_pages == 3
+    pool.check()
+
+
+def test_hold_raids_free_list_only():
+    pool = KVPool(n_pages=4, page_size=2, slots=2)
+    pool.reserve(0, 6)                   # 3 pages mapped
+    assert len(pool.hold(10)) == 1       # free list had just one page
+    assert pool.used_pages == 3          # live slot untouched
+    pool.check()
+
+
+def test_check_catches_refcount_conservation_drift():
+    """A stray refcount on a mapped page must trip the conservation
+    check even though the page itself is legitimately mapped."""
+    pool = KVPool(n_pages=4, page_size=2, slots=2)
+    pool.reserve(0, 4)
+    pool.refcount[pool.slot_pages(0)[0]] += 1    # phantom reference
+    with pytest.raises(PageError):
+        pool.check()
+
+
+def test_check_catches_partition_overlap():
+    pool = KVPool(n_pages=4, page_size=2, slots=2)
+    pages = pool.reserve(0, 4)
+    pool.release(0, preempt=True)
+    pool._cached.add(pages[0])           # corrupt: preempted AND cached
+    with pytest.raises(PageError, match="both"):
+        pool.check()
+
+
+def test_page_errors_include_slot_snapshot():
+    pool = KVPool(n_pages=2, page_size=2, slots=2)
+    pool.reserve(0, 4)
+    with pytest.raises(PageError, match=r"slot 0 pages=\["):
+        pool.reserve(0, 2)               # double reserve: snapshot shows
+    with pytest.raises(PageError, match=r"free, 2 mapped"):
+        pool.extend(0, 1)                # exhausted: pool totals shown
+
+
+# --------------------------------------------------------------------------
 # property tests (optional dep — only these skip when hypothesis is absent,
 # the unit tests above always run)
 # --------------------------------------------------------------------------
