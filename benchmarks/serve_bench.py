@@ -216,10 +216,12 @@ def seed_batcher_run(model, params, cfg: ServeConfig, requests, max_new):
 
 
 def engine_run(model, params, cfg: ServeConfig, requests, max_new,
-               chaos=None):
+               chaos=None, telemetry=None):
     """Returns (results, batcher) — the batcher carries the KV-utilization
-    samples and, in paged mode, the page pool."""
-    b = Batcher(model, params, cfg, chaos=chaos)
+    samples and, in paged mode, the page pool.  ``telemetry`` is an
+    optional :class:`repro.serve.telemetry.Tracer` the run records into
+    (warmup runs pass none, so a trace holds only the measured drain)."""
+    b = Batcher(model, params, cfg, chaos=chaos, telemetry=telemetry)
     for rid, p in requests:
         b.submit(rid, p)
     return b.run(max_new=max_new), b
@@ -240,7 +242,7 @@ def bench(arch: str = "qwen2-0.5b", *, batch: int = 4, requests: int = 12,
           shared_prefix: int = 0, prefill_chunk: int | None = None,
           speculate_k: int | None = None,
           admission_mode: str = "reserve", chaos=None,
-          seed: int = 0) -> dict:
+          trace_out: str | None = None, seed: int = 0) -> dict:
     cfg = get_config(arch).reduced()
     model = Model(cfg)
     params = pm.unwrap(model.init(jax.random.key(seed)))
@@ -272,10 +274,18 @@ def bench(arch: str = "qwen2-0.5b", *, batch: int = 4, requests: int = 12,
     # Smoke mode skips the warmup — it only sanity-checks liveness.
     if not smoke:
         engine_run(model, params, scfg, reqs, max_new)
+    tracer = None
+    if trace_out:
+        from repro.serve.telemetry import Tracer
+        tracer = Tracer()
     t0 = time.perf_counter()
     got, batcher = engine_run(model, params, scfg, reqs, max_new,
-                              chaos=chaos)
+                              chaos=chaos, telemetry=tracer)
     dt_engine = time.perf_counter() - t0
+    if tracer is not None:
+        tracer.to_perfetto(trace_out)
+        print(f"[serve_bench] wrote Perfetto trace -> {trace_out} "
+              f"({len(tracer.events)} events)")
     toks = sum(len(v) for v in got.values())
     util = batcher.kv_utilization()
     pstats = batcher.prefix_stats()
@@ -695,6 +705,10 @@ def main() -> None:
                          "recompute, the full mode runs preempt_compare")
     ap.add_argument("--smoke", action="store_true",
                     help="CI sanity: engine only, tiny sizes, ~5s")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record the measured drain's request-lifecycle "
+                         "trace and write it as Chrome/Perfetto "
+                         "trace_event JSON (open at ui.perfetto.dev)")
     args = ap.parse_args()
     if args.prefix_cache and not args.paged:
         ap.error("--prefix-cache requires --paged")
@@ -748,7 +762,7 @@ def main() -> None:
                   total_pages=10 if args.optimistic else None,
                   admission_mode=("optimistic" if args.optimistic
                                   else "reserve"),
-                  chaos=chaos,
+                  chaos=chaos, trace_out=args.trace_out,
                   # at the smoke's tiny default prompts a chunk never
                   # splits — make every prompt long enough to take 2+
                   # bites (the shared prefix also feeds --prefix-cache)
@@ -805,7 +819,7 @@ def main() -> None:
               sync_every=args.sync_every, paged=args.paged,
               page_size=args.page_size, prefix_cache=args.prefix_cache,
               prefill_chunk=args.prefill_chunk,
-              speculate_k=args.speculate)
+              speculate_k=args.speculate, trace_out=args.trace_out)
     mode = ("spec" if args.speculate
             else "paged+prefix" if args.prefix_cache
             else "paged" if args.paged else "dense")

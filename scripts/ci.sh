@@ -65,11 +65,17 @@ timeout 300 python benchmarks/serve_bench.py --paged --speculate 3 --smoke
 echo "== serving smoke (optimistic admission + forced preemption) =="
 # tiny pool + chaos-forced exhaustion (free list raided at round 2,
 # returned at round 5); the smoke asserts at least one slot was actually
-# preempted and every preempted request completed via recompute-on-resume
-timeout 300 python benchmarks/serve_bench.py --paged --optimistic --smoke
+# preempted and every preempted request completed via recompute-on-resume.
+# --trace-out records the run's request-lifecycle trace: the chaos run is
+# the richest one (preempt/resume, chaos instants), so it is the one CI
+# archives as trace_smoke.json and gates below
+timeout 300 python benchmarks/serve_bench.py --paged --optimistic --smoke \
+  --trace-out trace_smoke.json
 
 echo "== bench trajectory vs committed baseline =="
 # fails on throughput collapse / lost hit rate / dead drafter / broken
 # reclamation, and doubles as the one-line-per-row bench delta summary;
-# the table is also written to bench_delta.txt for the CI artifact
-python scripts/check_bench.py --out bench_delta.txt
+# the table is also written to bench_delta.txt for the CI artifact.
+# --trace additionally gates the chaos smoke's Perfetto trace: loadable,
+# non-empty, every submitted request retired
+python scripts/check_bench.py --out bench_delta.txt --trace trace_smoke.json

@@ -1,4 +1,5 @@
-from .ops import (paged_attn, paged_attn_xla,  # noqa: F401
+from .ops import (PagedAttnTelemetry, attn_telemetry,  # noqa: F401
+                  paged_attn, paged_attn_xla,
                   paged_prefill_attn, paged_prefill_attn_pallas,
                   paged_verify_attn)
 from .ref import (gather_pages, paged_attn_ref,  # noqa: F401

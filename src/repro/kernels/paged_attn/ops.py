@@ -18,6 +18,7 @@ they are clamped to a valid page here, once, and masked by ``lengths``.
 from __future__ import annotations
 
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -27,17 +28,92 @@ from .prefill_kernel import paged_prefill_attn_kernel
 from .ref import gather_pages
 
 
+class PagedAttnTelemetry:
+    """Host-side timing hooks for the paged-attention ops.
+
+    Disabled by default, in which case every op takes a single
+    ``if not enabled`` branch and nothing else — no timing, no device
+    sync, no allocation.  When enabled, each public op records under a
+    ``(op, route)`` key (op in ``decode`` / ``prefill`` / ``verify``,
+    route in ``kernel`` / ``xla``):
+
+    * ``calls`` — total invocations;
+    * ``traced_calls`` — the subset seen under a jax trace (inside
+      ``jit`` / ``scan``), where the op runs once per *compile*, not per
+      step, and wall time would be trace time — so those calls are
+      counted but never timed or synced;
+    * ``tokens`` — query-token volume (B × Lq), from static shapes so
+      it is meaningful for traced calls too;
+    * ``wall_s`` — eager-call wall time, measured around a
+      ``block_until_ready`` on the op's output.  Only eager calls pay
+      this sync; jitted serving paths are untouched by design.
+    """
+
+    def __init__(self):
+        self.enabled = False
+        self.stats: dict = {}
+
+    def enable(self) -> None:
+        self.enabled = True
+
+    def disable(self) -> None:
+        self.enabled = False
+
+    def reset(self) -> None:
+        self.stats = {}
+
+    def _bump(self, op: str, route: str, tokens: int, *,
+              traced: bool = False, wall: float = 0.0) -> None:
+        d = self.stats.setdefault((op, route), {
+            "calls": 0, "traced_calls": 0, "tokens": 0, "wall_s": 0.0})
+        d["calls"] += 1
+        d["traced_calls"] += int(traced)
+        d["tokens"] += tokens
+        d["wall_s"] += wall
+
+    def snapshot(self) -> dict:
+        """Flat ``{"op.route": {...}}`` copy for reporting."""
+        return {f"{op}.{route}": dict(d)
+                for (op, route), d in sorted(self.stats.items())}
+
+
+_TELEMETRY = PagedAttnTelemetry()
+
+
+def attn_telemetry() -> PagedAttnTelemetry:
+    """The module-level :class:`PagedAttnTelemetry` instance shared by
+    every op in this module."""
+    return _TELEMETRY
+
+
+def _recorded(op: str, route: str, q: jnp.ndarray, fn, *args, **kw):
+    """Run ``fn(*args, **kw)``, attributing it to ``(op, route)``.
+
+    Token volume comes from ``q``'s static shape (B × Lq; Lq = 1 for
+    [B, H, D] decode queries).  Traced calls are counted but not timed:
+    a ``block_until_ready`` under trace would be wrong twice over (it
+    measures tracing, and it would land inside the caller's jit)."""
+    tel = _TELEMETRY
+    tokens = int(q.shape[0]) * (int(q.shape[1]) if q.ndim == 4 else 1)
+    if isinstance(q, jax.core.Tracer):
+        tel._bump(op, route, tokens, traced=True)
+        return fn(*args, **kw)
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    tel._bump(op, route, tokens, wall=time.perf_counter() - t0)
+    return out
+
+
 def _clamp_table(table: jnp.ndarray, n_pages: int) -> jnp.ndarray:
     return jnp.minimum(table.astype(jnp.int32), n_pages - 1)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def paged_attn(q: jnp.ndarray, k_pages: jnp.ndarray, v_pages: jnp.ndarray,
-               table: jnp.ndarray, lengths: jnp.ndarray, *,
-               interpret: bool = True) -> jnp.ndarray:
-    """q: [B, Hq, D] one-token queries; k_pages/v_pages: [N, ps, Hkv, D]
-    pooled pages; table: [B, P] int32; slot b attends over the first
-    ``lengths[b]`` tokens of its pages in table order."""
+def _paged_attn_jit(q: jnp.ndarray, k_pages: jnp.ndarray,
+                    v_pages: jnp.ndarray, table: jnp.ndarray,
+                    lengths: jnp.ndarray, *,
+                    interpret: bool = True) -> jnp.ndarray:
     b, hq, d = q.shape
     hkv = k_pages.shape[2]
     g = hq // hkv
@@ -49,11 +125,32 @@ def paged_attn(q: jnp.ndarray, k_pages: jnp.ndarray, v_pages: jnp.ndarray,
     return out.reshape(b, hq, d)
 
 
+def paged_attn(q: jnp.ndarray, k_pages: jnp.ndarray, v_pages: jnp.ndarray,
+               table: jnp.ndarray, lengths: jnp.ndarray, *,
+               interpret: bool = True) -> jnp.ndarray:
+    """q: [B, Hq, D] one-token queries; k_pages/v_pages: [N, ps, Hkv, D]
+    pooled pages; table: [B, P] int32; slot b attends over the first
+    ``lengths[b]`` tokens of its pages in table order."""
+    if not _TELEMETRY.enabled:
+        return _paged_attn_jit(q, k_pages, v_pages, table, lengths,
+                               interpret=interpret)
+    return _recorded("decode", "kernel", q, _paged_attn_jit,
+                     q, k_pages, v_pages, table, lengths,
+                     interpret=interpret)
+
+
 def paged_attn_xla(q: jnp.ndarray, k_pages: jnp.ndarray,
                    v_pages: jnp.ndarray, table: jnp.ndarray,
                    lengths: jnp.ndarray) -> jnp.ndarray:
     """Gather-then-attend fallback: identical math on the XLA path (used
     off-TPU where the Pallas interpreter would sit in the hot loop)."""
+    if _TELEMETRY.enabled:
+        return _recorded("decode", "xla", q, _paged_attn_xla_impl,
+                         q, k_pages, v_pages, table, lengths)
+    return _paged_attn_xla_impl(q, k_pages, v_pages, table, lengths)
+
+
+def _paged_attn_xla_impl(q, k_pages, v_pages, table, lengths):
     from ..decode_attn.ref import decode_attn_ref
     k = gather_pages(k_pages, table)
     v = gather_pages(v_pages, table)
@@ -89,7 +186,8 @@ def paged_prefill_attn_pallas(q: jnp.ndarray, k_pages: jnp.ndarray,
 def paged_prefill_attn(q: jnp.ndarray, k_pages: jnp.ndarray,
                        v_pages: jnp.ndarray, table: jnp.ndarray,
                        q_offset: jnp.ndarray,
-                       kv_len: jnp.ndarray) -> jnp.ndarray:
+                       kv_len: jnp.ndarray, *,
+                       _op: str | None = None) -> jnp.ndarray:
     """Prefill-attention through the page table: multi-token causal GQA
     queries ``q`` [B, L, Hq, D] at per-slot depths ``q_offset`` [B] over
     pooled pages, masked to each slot's ``kv_len``.
@@ -111,10 +209,19 @@ def paged_prefill_attn(q: jnp.ndarray, k_pages: jnp.ndarray,
     from ..decode_attn import active_policy
     pol = active_policy()
     if pol.kernel_wanted():
+        if _TELEMETRY.enabled:
+            op = _op or ("decode" if q.shape[1] == 1 else "prefill")
+            return _recorded(op, "kernel", q, paged_prefill_attn_pallas,
+                             q, k_pages, v_pages, table, q_offset, kv_len,
+                             interpret=pol.resolve_interpret())
         return paged_prefill_attn_pallas(q, k_pages, v_pages, table,
                                          q_offset, kv_len,
                                          interpret=pol.resolve_interpret())
     from .ref import paged_prefill_attn_ref
+    if _TELEMETRY.enabled:
+        op = _op or ("decode" if q.shape[1] == 1 else "prefill")
+        return _recorded(op, "xla", q, paged_prefill_attn_ref,
+                         q, k_pages, v_pages, table, q_offset, kv_len)
     return paged_prefill_attn_ref(q, k_pages, v_pages, table,
                                   q_offset, kv_len)
 
@@ -148,4 +255,5 @@ def paged_verify_attn(q: jnp.ndarray, k_pages: jnp.ndarray,
       elsewhere.  Nothing k-specific is compiled — one executable serves
       any draft that fits the reserved window.
     """
-    return paged_prefill_attn(q, k_pages, v_pages, table, q_offset, kv_len)
+    return paged_prefill_attn(q, k_pages, v_pages, table, q_offset, kv_len,
+                              _op="verify")

@@ -29,7 +29,8 @@ def run(arch: str, *, reduced: bool = True, requests: int = 4,
         prefill_chunk: int | None = None,
         prefill_round_tokens: int | None = None,
         speculate_k: int | None = None,
-        speculate_ngram: int = 2, optimistic: bool = False) -> dict:
+        speculate_ngram: int = 2, optimistic: bool = False,
+        trace_out: str | None = None) -> dict:
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -44,7 +45,8 @@ def run(arch: str, *, reduced: bool = True, requests: int = 4,
                        speculate_k=speculate_k,
                        speculate_ngram=speculate_ngram,
                        admission_mode="optimistic" if optimistic
-                       else "reserve")
+                       else "reserve",
+                       telemetry=bool(trace_out))
     b = Batcher(model, params, scfg, eos_id=eos_id, seed=seed)
     rng = np.random.default_rng(seed)
     system = rng.integers(0, cfg.vocab, size=shared_prefix).tolist()
@@ -87,6 +89,11 @@ def run(arch: str, *, reduced: bool = True, requests: int = 4,
           f"({toks / dt:.1f} tok/s on {jax.default_backend()}, {mode}, "
           f"KV util {util['mean_util']:.0%}, TTFT p50 "
           f"{lat['ttft_p50_s'] * 1e3:.0f}ms)")
+    if trace_out:
+        b.telemetry.to_perfetto(trace_out)
+        print(f"[serve] wrote Perfetto trace -> {trace_out} "
+              f"({len(b.telemetry.events)} events; open at "
+              "ui.perfetto.dev)")
     return {"results": results, "tok_per_s": toks / dt, "kv_util": util,
             "prefix": pstats, "spec": sstats, "latency": lat,
             "preempt": kstats}
@@ -151,6 +158,10 @@ def main() -> None:
                          "preempting the lowest-priority / most-pages / "
                          "least-progress slot on pool pressure "
                          "(recompute-on-resume, bit-identical output)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record the run's request-lifecycle trace and "
+                         "write it as Chrome/Perfetto trace_event JSON "
+                         "(open at ui.perfetto.dev)")
     args = ap.parse_args()
     run(args.arch, reduced=args.reduced, requests=args.requests,
         max_new=args.max_new, batch=args.batch, max_len=args.max_len,
@@ -161,7 +172,7 @@ def main() -> None:
         admission=args.admission, prefill_chunk=args.prefill_chunk,
         prefill_round_tokens=args.prefill_round_tokens,
         speculate_k=args.speculate, speculate_ngram=args.speculate_ngram,
-        optimistic=args.optimistic)
+        optimistic=args.optimistic, trace_out=args.trace_out)
 
 
 if __name__ == "__main__":

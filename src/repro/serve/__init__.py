@@ -6,3 +6,4 @@ from .engine import (ServeConfig, jit_decode_loop,  # noqa: F401
                      jit_decode_step, jit_paged_decode_loop, jit_paged_join)
 from .kvpool import KVPool, PageError  # noqa: F401
 from .scheduler import Batcher, ContinuousBatcher  # noqa: F401
+from .telemetry import MetricsRegistry, Tracer  # noqa: F401

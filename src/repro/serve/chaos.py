@@ -82,20 +82,35 @@ class ChaosInjector:
     # ------------------------------------------------------------------
     def on_round(self, batcher) -> None:
         """Called by the scheduler at the top of every scheduling round
-        (``batcher.round`` has already been advanced)."""
+        (``batcher.round`` has already been advanced).  Every fault also
+        lands in the batcher's trace (``CHAOS_*`` instants on the
+        scheduler track) when telemetry is on, so a trace of a chaos run
+        shows the injected cause next to the preemptions it forced."""
         r = batcher.round
         pool = batcher.pool
+        tr = getattr(batcher, "telemetry", None)
+
+        def trace(kind, **attrs):
+            if tr is not None:
+                tr.event(kind, None, round=r,
+                         pool_free=pool.free_pages if pool else 0, **attrs)
+
         if pool is not None and r in self.release_at:
-            self.events.append((r, "release_held", pool.release_held()))
+            released = pool.release_held()
+            self.events.append((r, "release_held", released))
+            trace("CHAOS_RELEASE_HELD", pages=released)
         if pool is not None and r in self.exhaust_at:
             keep = self.exhaust_at[r]
             taken = pool.hold(max(0, pool.free_pages - keep))
             self.events.append((r, "hold", len(taken)))
+            trace("CHAOS_HOLD", pages=len(taken), keep_free=keep)
         if r in self.fail_slot_at:
             slot = self._resolve_slot(batcher, self.fail_slot_at[r])
             if slot is None:
                 self.events.append((r, "fail_slot_noop", -1))
+                trace("CHAOS_SLOT_FAILURE_NOOP")
             else:
+                trace("CHAOS_SLOT_FAILURE", slot=slot)
                 batcher._preempt_slot(slot, reason="slot-failure")
                 self.slot_failures += 1
                 self.events.append((r, "fail_slot", slot))
@@ -116,6 +131,10 @@ class ChaosInjector:
                 raise ValueError(f"chaos victim_override chose slot {v} "
                                  f"not in candidates {candidates}")
             self.events.append((batcher.round, "victim_override", v))
+            tr = getattr(batcher, "telemetry", None)
+            if tr is not None:
+                tr.event("CHAOS_VICTIM_OVERRIDE", None,
+                         round=batcher.round, slot=v)
         return v
 
     @staticmethod

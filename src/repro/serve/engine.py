@@ -107,6 +107,13 @@ class ServeConfig:
     # the history lookup.
     speculate_k: int | None = None
     speculate_ngram: int = 2
+    # unified telemetry (repro.serve.telemetry): when True the batcher
+    # builds a Tracer recording per-request lifecycle events, per-round
+    # scheduler spans and pool-partition gauges (exportable as Perfetto
+    # trace_event JSON).  Off by default — the off path adds zero work
+    # to the jitted closures (all instrumentation sits at host-sync /
+    # scheduling-round boundaries, never inside lax.scan).
+    telemetry: bool = False
 
     @property
     def max_pages(self) -> int:

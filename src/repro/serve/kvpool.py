@@ -99,6 +99,10 @@ class KVPool:
         # force pool pressure; never allocatable until release_held()
         self._held: set[int] = set()
         self.evictor = None                # set by prefixcache.PrefixCache
+        # telemetry gauge hook (set by the scheduler when tracing): called
+        # with the partition sizes after every mutating operation.  None
+        # (default) costs one attribute test per mutation.
+        self.gauge_cb = None
         self.refcount = np.zeros((n_pages,), np.int32)
         self.table = np.full((slots, self.max_pages), self.sentinel,
                              np.int32)
@@ -161,6 +165,16 @@ class KVPool:
     def slot_pages(self, slot: int) -> list[int]:
         return list(self._slot_pages[slot])
 
+    def _notify(self) -> None:
+        """Telemetry gauge: report the partition sizes after a mutation
+        (free + mapped + cached + preempted + held == n_pages always —
+        the counter track in the trace shows the partition flow)."""
+        cb = self.gauge_cb
+        if cb is not None:
+            cb(free=len(self._free), mapped=self.used_pages,
+               cached=len(self._cached), preempted=len(self._preempted),
+               held=len(self._held))
+
     # ------------------------------------------------------------------
     # allocate / share / release
     # ------------------------------------------------------------------
@@ -213,6 +227,7 @@ class KVPool:
             self.refcount[p] += 1
             self.table[slot, i] = p
         self._slot_pages[slot] = pages
+        self._notify()
         return pages
 
     def share(self, slot: int, pages: list[int]) -> None:
@@ -241,6 +256,7 @@ class KVPool:
             self.refcount[p] += 1
             self.table[slot, i] = p
         self._slot_pages[slot] = list(pages)
+        self._notify()
 
     def extend(self, slot: int, n: int) -> list[int]:
         """Append ``n`` fresh pages after ``slot``'s current mapping — the
@@ -258,6 +274,7 @@ class KVPool:
             self.refcount[p] += 1
             self.table[slot, len(held) + i] = p
         held.extend(pages)
+        self._notify()
         return pages
 
     def release(self, slot: int,
@@ -298,6 +315,7 @@ class KVPool:
                     freed += 1
         self._slot_pages[slot] = []
         self.table[slot, :] = self.sentinel
+        self._notify()
         return freed
 
     def reclaim(self, page: int) -> None:
@@ -307,6 +325,7 @@ class KVPool:
             raise PageError(f"reclaim of non-cached page {page}")
         self._cached.discard(page)
         self._free.append(page)
+        self._notify()
 
     # ------------------------------------------------------------------
     # chaos / fault-injection hooks (repro.serve.chaos)
@@ -318,6 +337,7 @@ class KVPool:
         pressure arrives exactly as a smaller effective pool would."""
         taken = [self._free.pop() for _ in range(min(n, len(self._free)))]
         self._held.update(taken)
+        self._notify()
         return taken
 
     def release_held(self) -> int:
@@ -325,6 +345,7 @@ class KVPool:
         n = len(self._held)
         self._free.extend(sorted(self._held))
         self._held.clear()
+        self._notify()
         return n
 
     # ------------------------------------------------------------------

@@ -181,19 +181,15 @@ from .engine import (PAD_TOKEN, ServeConfig, jit_decode_loop, jit_join,
                      jit_spec_decode_loop)
 from .kvpool import KVPool, PageError
 from .prefixcache import PrefixCache
+# _pct moved to telemetry (the registry owns percentile math) but stays
+# importable from here — it has always been this module's public helper
+from .telemetry import MetricsRegistry, Tracer, _pct  # noqa: F401
 from ..models.model_zoo import Model
 
 
 def _pow2_bucket(n: int, lo: int = 16, hi: int | None = None) -> int:
     b = max(lo, 1 << max(0, n - 1).bit_length())
     return min(b, hi) if hi is not None else b
-
-
-def _pct(a: list[float], q: float) -> float:
-    """Percentile guarded against empty inputs — the single helper every
-    stats method shares (0.0 on no samples, matching the rest of the
-    reportable-either-way stats contract)."""
-    return float(np.percentile(np.asarray(a), q)) if a else 0.0
 
 
 class ContinuousBatcher:
@@ -206,9 +202,18 @@ class ContinuousBatcher:
     """
 
     def __init__(self, model: Model, params, cfg: ServeConfig,
-                 eos_id: int | None = None, seed: int = 0, chaos=None):
+                 eos_id: int | None = None, seed: int = 0, chaos=None,
+                 telemetry: Tracer | None = None):
         self.model, self.params, self.cfg = model, params, cfg
         self.eos = eos_id
+        # every accumulated stat lives in the registry (the *_stats()
+        # methods and the legacy counter attributes are views over it);
+        # the tracer is optional — None (the default, unless
+        # cfg.telemetry asks for one) keeps every event call site a
+        # skipped ``if`` at scheduling-round boundaries
+        self.metrics = MetricsRegistry()
+        self.telemetry = (telemetry if telemetry is not None
+                          else Tracer() if cfg.telemetry else None)
         self.queue: collections.deque[tuple[int, list[int]]] = \
             collections.deque()
         self.results: dict[int, list[int]] = {}
@@ -300,12 +305,10 @@ class ContinuousBatcher:
                     "prefix_cache is attention-only: hybrid SSM models "
                     "cannot resume a recurrent state from cached pages")
             self.prefix = PrefixCache(self.pool)
-        # prefill accounting: tokens actually computed by joins vs skipped
-        # because their KV was already resident (prefix-cache hits)
-        self.prefill_computed = 0
-        self.prefill_skipped = 0
-        self.prefix_admits = 0
-        self.prefix_hits = 0
+        if self.telemetry is not None and self.pool is not None:
+            # pool-partition gauge: every allocator mutation lands one
+            # counter sample in the trace (and the current-state gauges)
+            self.pool.gauge_cb = self._on_pool_gauge
         self.tok = jnp.zeros((b, 1), jnp.int32)
         self.lengths = jnp.zeros((b,), jnp.int32)
         self.done = jnp.ones((b,), bool)
@@ -329,32 +332,17 @@ class ContinuousBatcher:
         # skip-ahead aging: times each queued rid has been bypassed
         self._skips: dict[int, int] = {}
         self.admit_order: list[int] = []
-        # join-latency trajectory: wall time of every refill that ran a
-        # join (the decode stall a long prompt causes — what chunking
-        # bounds) and how many of those joins were chunk continuations
-        self.join_times: list[float] = []
-        self.chunk_joins = 0
-        # decode-priority budget: prefill pieces pushed to a later round
-        # because the round's prefill_round_tokens cap was reached
-        self.budget_deferrals = 0
         # self-speculation: host mirror of the per-slot token history the
         # device drafter reads (prompt at admission, first token at
-        # commit, then synced back from the scan carry each segment), and
-        # the per-step acceptance accounting behind spec_stats()
+        # commit, then synced back from the scan carry each segment)
         self.history = np.zeros((b, cfg.max_len), np.int32)
-        self.spec_steps = 0
-        self.spec_proposed = 0
-        self.spec_accepted = 0
-        self.spec_emitted = 0
         # request latency trajectory: wall-clock TTFT (run start -> first
-        # sampled token) and time-per-output-token per retired request
+        # sampled token) and time-per-output-token per retired request —
+        # the samples themselves live in the registry ("lat.*" hists)
         self._clock0: float | None = None
         self._first_tok_t: dict[int, float] = {}
-        self.ttfts: list[float] = []
-        self.tpots: list[float] = []
         # queue-wait trajectory: submit (or preemption) -> admission
         self._submit_t: dict[int, float] = {}
-        self.queue_waits: list[float] = []
         # optimistic admission / preemption state: per-request priority
         # class (victim policy evicts lowest first), the slot's total
         # token ceiling (prompt + remaining budget + spec window — what
@@ -369,10 +357,101 @@ class ContinuousBatcher:
         self._preempt_counts: dict[int, int] = {}
         self.preempted_rids: set[int] = set()
         self.preempt_events: list[tuple[int, int, int, str]] = []
-        self.preemptions = 0
-        self.preempted_token_recompute = 0
         # scheduling-round counter: the chaos injector keys on it
         self.round = 0
+
+    # ------------------------------------------------------------------
+    # legacy counter surface: every accumulated stat is stored in the
+    # metrics registry; these read-only views keep the attribute names
+    # tests, benches and older callers read (no churn, one store)
+    # ------------------------------------------------------------------
+    @property
+    def prefill_computed(self) -> int:
+        return int(self.metrics.value("prefill.computed_tokens"))
+
+    @property
+    def prefill_skipped(self) -> int:
+        return int(self.metrics.value("prefill.skipped_tokens"))
+
+    @property
+    def prefix_admits(self) -> int:
+        return int(self.metrics.value("prefix.admits"))
+
+    @property
+    def prefix_hits(self) -> int:
+        return int(self.metrics.value("prefix.hits"))
+
+    @property
+    def chunk_joins(self) -> int:
+        return int(self.metrics.value("join.chunk_continuations"))
+
+    @property
+    def budget_deferrals(self) -> int:
+        return int(self.metrics.value("join.budget_deferrals"))
+
+    @property
+    def spec_steps(self) -> int:
+        return int(self.metrics.value("spec.steps"))
+
+    @property
+    def spec_proposed(self) -> int:
+        return int(self.metrics.value("spec.proposed"))
+
+    @property
+    def spec_accepted(self) -> int:
+        return int(self.metrics.value("spec.accepted"))
+
+    @property
+    def spec_emitted(self) -> int:
+        return int(self.metrics.value("spec.emitted"))
+
+    @property
+    def preemptions(self) -> int:
+        return int(self.metrics.value("preempt.count"))
+
+    @property
+    def preempted_token_recompute(self) -> int:
+        return int(self.metrics.value("preempt.recompute_tokens"))
+
+    @property
+    def join_times(self) -> list[float]:
+        return self.metrics.samples("join.seconds")
+
+    @property
+    def ttfts(self) -> list[float]:
+        return self.metrics.samples("lat.ttft_s")
+
+    @property
+    def tpots(self) -> list[float]:
+        return self.metrics.samples("lat.tpot_s")
+
+    @property
+    def queue_waits(self) -> list[float]:
+        return self.metrics.samples("lat.queue_wait_s")
+
+    # ------------------------------------------------------------------
+    # telemetry plumbing (every call site guards on ``telemetry is None``
+    # — tracing off is the default and costs one attribute test per
+    # scheduling-round boundary, nothing on jitted paths)
+    # ------------------------------------------------------------------
+    def _on_pool_gauge(self, **counts) -> None:
+        tr = self.telemetry
+        if tr is not None:
+            tr.pool_gauge(counts)
+        for k, v in counts.items():
+            self.metrics.set_gauge(f"pool.{k}_pages", v)
+
+    def _trace(self, kind: str, rid: int | None,
+               slot: int | None = None, **attrs) -> None:
+        tr = self.telemetry
+        if tr is None:
+            return
+        pages = (len(self.pool.slot_pages(slot))
+                 if self.pool is not None and slot is not None else 0)
+        free = self.pool.free_pages if self.pool is not None else 0
+        tr.event(kind, rid, round=self.round, slot=slot,
+                 pages_held=attrs.pop("pages_held", pages),
+                 pool_free=attrs.pop("pool_free", free), **attrs)
 
     # ------------------------------------------------------------------
     def submit(self, rid: int, prompt: list[int],
@@ -385,6 +464,8 @@ class ContinuousBatcher:
         self.queue.append((rid, list(prompt)))
         self.req_priority[rid] = priority
         self._submit_t[rid] = time.perf_counter()
+        self._trace("SUBMIT", rid, prompt_tokens=len(prompt),
+                    priority=priority)
 
     # ------------------------------------------------------------------
     def _loop(self, steps: int, cap: int | None):
@@ -426,7 +507,8 @@ class ContinuousBatcher:
         re-opened at each preemption)."""
         t0 = self._submit_t.pop(rid, None)
         if t0 is not None:
-            self.queue_waits.append(time.perf_counter() - t0)
+            self.metrics.observe("lat.queue_wait_s",
+                                 time.perf_counter() - t0)
 
     # ------------------------------------------------------------------
     def _admit_next(self, slot: int, max_new: int):
@@ -447,6 +529,7 @@ class ContinuousBatcher:
             rid, p = self.queue.popleft()
             self.admit_order.append(rid)
             self._note_admitted(rid)
+            self._trace("ADMIT", rid, slot=slot, prompt_tokens=len(p))
             return rid, p, 0
         optimistic = self.cfg.admission_mode == "optimistic"
         window = 1
@@ -504,8 +587,15 @@ class ContinuousBatcher:
                 covered = (len(p) if chunk is None
                            else min(len(p), mtoks + chunk))
                 self._register_covered(slot, p, covered)
-                self.prefix_admits += 1
-                self.prefix_hits += bool(mtoks)
+                self.metrics.inc("prefix.admits")
+                self.metrics.inc("prefix.hits", int(bool(mtoks)))
+            self._trace("ADMIT", rid, slot=slot, prompt_tokens=len(p),
+                        matched_tokens=mtoks)
+            if rid in self._resumed:
+                # recompute-on-resume re-enters through ordinary
+                # admission — the RESUME mark pairs with its PREEMPT
+                self._trace("RESUME", rid, slot=slot,
+                            prior_tokens=len(self.outputs.get(rid, ())))
             return rid, p, mtoks
         return None
 
@@ -577,6 +667,7 @@ class ContinuousBatcher:
         if self.prefix is not None:
             cacheable = self.prefix.registered_pages(
                 self.pool.slot_pages(slot))
+        pages_released = len(self.pool.slot_pages(slot))
         self.pool.release(slot, cacheable=cacheable, preempt=True)
         self.slot_rid[slot] = None
         self.slot_pending[slot] = []
@@ -593,7 +684,9 @@ class ContinuousBatcher:
         self.queue.appendleft((rid, resume))
         self._resumed.add(rid)
         self.preempted_rids.add(rid)
-        self.preemptions += 1
+        self.metrics.inc("preempt.count")
+        self._trace("PREEMPT", rid, slot=slot, reason=reason,
+                    pages_held=pages_released, resident_tokens=resident)
         self._submit_t[rid] = time.perf_counter()   # re-open queue wait
         n = self._preempt_counts[rid] = self._preempt_counts.get(rid, 0) + 1
         if n >= max(1, self.cfg.admission_max_skips):
@@ -681,7 +774,7 @@ class ContinuousBatcher:
             if round_cap is not None and round_used >= round_cap:
                 # decode-priority budget: this round already took its
                 # prefill tokens — the continuation rides the next round
-                self.budget_deferrals += 1
+                self.metrics.inc("join.budget_deferrals")
                 continue
             pend = self.slot_pending[slot]
             piece = pend[:chunk] if chunk else list(pend)
@@ -690,7 +783,7 @@ class ContinuousBatcher:
                 self._register_covered(slot, self.slot_prompt[slot],
                                        depth + len(piece))
             take.append((slot, rid, piece, depth, len(piece) == len(pend)))
-            self.chunk_joins += 1
+            self.metrics.inc("join.chunk_continuations")
             round_used += len(piece)
         # 2. new admissions into free slots (first chunk of each)
         free = [i for i, r in enumerate(self.slot_rid) if r is None]
@@ -702,8 +795,8 @@ class ContinuousBatcher:
                 # admission this budget pushed to a later round — count
                 # them all so the metric matches the per-slot counting
                 # of deferred continuations above
-                self.budget_deferrals += min(len(free) - fi,
-                                             len(self.queue))
+                self.metrics.inc("join.budget_deferrals",
+                                 min(len(free) - fi, len(self.queue)))
                 break
             cand = self._admit_next(slot, max_new)
             if cand is None:
@@ -741,11 +834,13 @@ class ContinuousBatcher:
             prompts[slot, :len(piece)] = piece
             plens[slot] = len(piece)
             prefix_lens[slot] = depth
-            self.prefill_computed += len(piece)
+            self.metrics.inc("prefill.computed_tokens", len(piece))
+            self._trace("PREFILL_CHUNK", rid, slot=slot,
+                        tokens=len(piece), depth=depth, commit=commit)
             if rid in self._resumed:
                 # prefill spent re-admitting a preempted request — the
                 # direct cost of recompute-on-resume
-                self.preempted_token_recompute += len(piece)
+                self.metrics.inc("preempt.recompute_tokens", len(piece))
                 # the resume's device budget is only the *remaining*
                 # tokens: its prompt already carries the committed ones,
                 # so the done-latch must fire at the original total
@@ -767,7 +862,8 @@ class ContinuousBatcher:
         for slot, rid, piece, depth, commit in take:
             new_admission = self.slot_rid[slot] is None
             if new_admission:
-                self.prefill_skipped += depth     # cached-prefix tokens
+                # cached-prefix tokens the join never had to compute
+                self.metrics.inc("prefill.skipped_tokens", depth)
             self.slot_filled[slot] = depth + len(piece)
             self.slot_pending[slot] = self.slot_pending[slot][len(piece):]
             self.slot_len[slot] = self.slot_filled[slot]
@@ -790,7 +886,9 @@ class ContinuousBatcher:
             if self._clock0 is not None and rid not in self._first_tok_t:
                 # a resumed request keeps its original first-token stamp
                 self._first_tok_t[rid] = now
-                self.ttfts.append(now - self._clock0)
+                self.metrics.observe("lat.ttft_s", now - self._clock0)
+                self._trace("FIRST_TOKEN", rid, slot=slot, token=tokv,
+                            ttft_s=now - self._clock0)
             if self.spec_k:
                 # newest token at position filled: the current token the
                 # next verify step's tail n-gram ends on
@@ -801,15 +899,20 @@ class ContinuousBatcher:
                 self.slot_rid[slot] = None
                 self._resumed.discard(rid)
                 self._preempt_counts.pop(rid, None)
+                self._trace("RETIRE", rid, slot=slot, tokens=len(out))
                 self._release_slot(slot)
                 if (self._clock0 is not None and len(out) > 1
                         and rid in self._first_tok_t):
-                    self.tpots.append((now - self._first_tok_t[rid])
-                                      / (len(out) - 1))
+                    self.metrics.observe(
+                        "lat.tpot_s",
+                        (now - self._first_tok_t[rid]) / (len(out) - 1))
             else:
                 self.slot_rid[slot] = rid
                 self.slot_budget[slot] = max_new
-        self.join_times.append(time.perf_counter() - t0)
+        t1 = time.perf_counter()
+        self.metrics.observe("join.seconds", t1 - t0)
+        if self.telemetry is not None:
+            self.telemetry.add_span("join", self.round, t0, t1)
 
     # ------------------------------------------------------------------
     def _collect(self, emitted: np.ndarray) -> None:
@@ -851,23 +954,29 @@ class ContinuousBatcher:
                         self.slot_rid[i] = None
                         self._resumed.discard(rid)
                         self._preempt_counts.pop(rid, None)
+                        self._trace("RETIRE", rid, slot=i,
+                                    tokens=len(out))
                         # exact reclamation at this segment edge: private
                         # pages go back to the free list, registered
                         # prefix pages park evictable-cached for matches
                         self._release_slot(i)
                         if (self._clock0 is not None and len(out) > 1
                                 and rid in self._first_tok_t):
-                            self.tpots.append(
+                            self.metrics.observe(
+                                "lat.tpot_s",
                                 (now - self._first_tok_t[rid])
                                 / (len(out) - 1))
                         break
                 if self.spec_k and burst:
                     # one verify step committed ``burst`` tokens: burst-1
                     # drafts were accepted plus the model's bonus token
-                    self.spec_steps += 1
-                    self.spec_proposed += self.spec_k
-                    self.spec_accepted += burst - 1
-                    self.spec_emitted += burst
+                    self.metrics.inc("spec.steps")
+                    self.metrics.inc("spec.proposed", self.spec_k)
+                    self.metrics.inc("spec.accepted", burst - 1)
+                    self.metrics.inc("spec.emitted", burst)
+                    self._trace("SPEC_COMMIT", rid, slot=i, step=t,
+                                committed=burst,
+                                accepted_drafts=burst - 1)
                 if self.slot_rid[i] is None:
                     break
                 if burst == 0:
@@ -920,10 +1029,15 @@ class ContinuousBatcher:
                     f" pages, pool holds {self.pool.n_pages} "
                     f"(max {self.pool.max_pages}/slot)")
         idle_rounds = 0
+        tr = self.telemetry
         while self.queue or any(r is not None for r in self.slot_rid):
             self.round += 1
             if self.chaos is not None:
-                self.chaos.on_round(self)
+                if tr is not None:
+                    with tr.span("chaos", self.round):
+                        self.chaos.on_round(self)
+                else:
+                    self.chaos.on_round(self)
             self._refill(max_new)
             if not any(r is not None and not self.slot_pending[i]
                        for i, r in enumerate(self.slot_rid)):
@@ -955,6 +1069,7 @@ class ContinuousBatcher:
                        for i, r in enumerate(self.slot_rid)):
                 continue
             self._sample_kv()
+            seg_t0 = time.perf_counter() if tr is not None else 0.0
             if self.spec_k:
                 cap = self._page_cap()
                 loop = self._loop(steps, cap)
@@ -981,7 +1096,17 @@ class ContinuousBatcher:
                   self.remaining, self.key), emitted) = loop(
                     self.params, self.tok, self.caches, self.lengths,
                     self.done, self.remaining, self.key)
-            self._collect(np.asarray(emitted))
+            if tr is not None:
+                # block so the segment span measures device wall time,
+                # not dispatch — a tracing-on-only sync (the off path's
+                # sync stays where it always was: np.asarray below)
+                jax.block_until_ready(emitted)
+                tr.add_span("decode-segment", self.round, seg_t0,
+                            time.perf_counter())
+                with tr.span("collect", self.round):
+                    self._collect(np.asarray(emitted))
+            else:
+                self._collect(np.asarray(emitted))
         return self.results
 
     # ------------------------------------------------------------------
@@ -1018,28 +1143,38 @@ class ContinuousBatcher:
         continuation pieces (0 when unchunked); ``budget_deferrals``
         counts prefill pieces pushed to a later round by the
         decode-priority ``prefill_round_tokens`` cap (0 when uncapped)."""
-        jt = self.join_times
-        return {"joins": len(jt),
-                "chunk_joins": self.chunk_joins,
-                "budget_deferrals": self.budget_deferrals,
-                "max_join_s": max(jt, default=0.0),
-                "mean_join_s": sum(jt) / len(jt) if jt else 0.0}
+        m = self.metrics
+        n = m.count("join.seconds")
+        return {"joins": n,
+                "chunk_joins": int(m.value("join.chunk_continuations")),
+                "budget_deferrals": int(m.value("join.budget_deferrals")),
+                "max_join_s": max(m.samples("join.seconds"), default=0.0),
+                "mean_join_s": m.sum("join.seconds") / n if n else 0.0}
 
     def reset_stats(self) -> None:
-        """Zero the per-wave measurement state — the latency clock and
-        TTFT/TPOT inputs (including the per-request first-token stamps,
-        so a re-submitted rid can never pair with a stale timestamp) and
-        the speculative acceptance counters.  Benchmarks re-submit
+        """Zero *all* per-wave measurement state.  Benchmarks re-submit
         requests into a *warm* batcher to measure the steady serving
         state (a fresh instance would re-jit its closures and time
         compilation); without this reset the second wave's stats would
-        blend with the first's."""
+        blend with the first's.
+
+        The accumulated stats all live in the metrics registry, so one
+        ``metrics.reset()`` clears every counter and histogram — latency
+        and queue-wait samples, join times, speculative acceptance,
+        preemption/recompute tallies, budget deferrals, prefill/prefix
+        accounting (the pre-registry version hand-picked a subset and
+        silently missed the rest).  What it deliberately does *not*
+        touch is operational state the next wave still depends on:
+        ``_resumed`` / ``_preempt_counts`` / ``_submit_t`` (in-flight
+        request bookkeeping), ``_skips`` / ``admit_order`` (admission
+        history), the slot table, and the round counter (the chaos
+        injector keys on it)."""
         self._clock0 = None
         self._first_tok_t.clear()
-        self.ttfts, self.tpots = [], []
-        self.queue_waits = []
-        self.spec_steps = self.spec_proposed = 0
-        self.spec_accepted = self.spec_emitted = 0
+        self.metrics.reset()
+        self.kv_samples = []
+        self.preempt_events.clear()
+        self.preempted_rids.clear()
 
     def spec_stats(self) -> dict:
         """Self-speculation effectiveness: ``acceptance_rate`` = accepted
@@ -1047,15 +1182,20 @@ class ContinuousBatcher:
         tokens per verify step (1.0 = speculation never helped, k+1 =
         every draft always accepted).  All zeros with speculation off, so
         the dict is reportable either way."""
+        m = self.metrics
+        steps = int(m.value("spec.steps"))
+        proposed = int(m.value("spec.proposed"))
+        accepted = int(m.value("spec.accepted"))
+        emitted = int(m.value("spec.emitted"))
         return {"enabled": bool(self.spec_k),
                 "k": self.spec_k,
-                "steps": self.spec_steps,
-                "proposed": self.spec_proposed,
-                "accepted": self.spec_accepted,
-                "acceptance_rate": (self.spec_accepted / self.spec_proposed
-                                    if self.spec_proposed else 0.0),
-                "tokens_per_step": (self.spec_emitted / self.spec_steps
-                                    if self.spec_steps else 0.0)}
+                "steps": steps,
+                "proposed": proposed,
+                "accepted": accepted,
+                "acceptance_rate": (accepted / proposed
+                                    if proposed else 0.0),
+                "tokens_per_step": (emitted / steps
+                                    if steps else 0.0)}
 
     def latency_stats(self) -> dict:
         """Per-request latency trajectory observed at host sync points:
@@ -1066,16 +1206,19 @@ class ContinuousBatcher:
         wait per admission).  Segment syncs quantize all of these —
         serving-level numbers, not kernel timings.  Preemption counters
         ride along so one dict describes what the request latencies paid
-        for (shared empty-guarded percentile helper: module ``_pct``)."""
-        return {"requests": len(self.ttfts),
-                "ttft_p50_s": _pct(self.ttfts, 50),
-                "ttft_p95_s": _pct(self.ttfts, 95),
-                "tpot_p50_s": _pct(self.tpots, 50),
-                "tpot_p95_s": _pct(self.tpots, 95),
-                "queue_wait_p50_s": _pct(self.queue_waits, 50),
-                "queue_wait_p95_s": _pct(self.queue_waits, 95),
-                "preemptions": self.preemptions,
-                "preempted_token_recompute": self.preempted_token_recompute}
+        for (percentiles come from the registry's histograms — the one
+        ``_pct`` implementation, no per-method sample plumbing)."""
+        m = self.metrics
+        return {"requests": m.count("lat.ttft_s"),
+                "ttft_p50_s": m.percentile("lat.ttft_s", 50),
+                "ttft_p95_s": m.percentile("lat.ttft_s", 95),
+                "tpot_p50_s": m.percentile("lat.tpot_s", 50),
+                "tpot_p95_s": m.percentile("lat.tpot_s", 95),
+                "queue_wait_p50_s": m.percentile("lat.queue_wait_s", 50),
+                "queue_wait_p95_s": m.percentile("lat.queue_wait_s", 95),
+                "preemptions": int(m.value("preempt.count")),
+                "preempted_token_recompute":
+                    int(m.value("preempt.recompute_tokens"))}
 
     def preempt_stats(self) -> dict:
         """Preemption effectiveness and liveness: how many evictions
