@@ -242,7 +242,9 @@ def bench(arch: str = "qwen2-0.5b", *, batch: int = 4, requests: int = 12,
           shared_prefix: int = 0, prefill_chunk: int | None = None,
           speculate_k: int | None = None,
           admission_mode: str = "reserve", chaos=None,
-          trace_out: str | None = None, seed: int = 0) -> dict:
+          trace_out: str | None = None, attr_out: str | None = None,
+          ttft_slo: float | None = None, tpot_slo: float | None = None,
+          seed: int = 0) -> dict:
     cfg = get_config(arch).reduced()
     model = Model(cfg)
     params = pm.unwrap(model.init(jax.random.key(seed)))
@@ -250,7 +252,8 @@ def bench(arch: str = "qwen2-0.5b", *, batch: int = 4, requests: int = 12,
                        paged=paged, page_size=page_size,
                        total_pages=total_pages, prefix_cache=prefix_cache,
                        prefill_chunk=prefill_chunk, speculate_k=speculate_k,
-                       admission_mode=admission_mode)
+                       admission_mode=admission_mode,
+                       ttft_slo_s=ttft_slo, tpot_slo_s=tpot_slo)
     if prefix_cache and not shared_prefix:
         shared_prefix = 2 * page_size      # two full shareable pages
     if speculate_k:
@@ -293,6 +296,7 @@ def bench(arch: str = "qwen2-0.5b", *, batch: int = 4, requests: int = 12,
     sstats = batcher.spec_stats()
     kstats = batcher.preempt_stats()
     lat = batcher.latency_stats()
+    slo = batcher.slo_stats()
     out = {"arch": arch, "tokens": toks, "paged": paged,
            "prefix_cache": prefix_cache,
            "engine_tok_s": toks / dt_engine, "engine_s": dt_engine,
@@ -312,7 +316,22 @@ def bench(arch: str = "qwen2-0.5b", *, batch: int = 4, requests: int = 12,
            "queue_wait_p50_s": lat["queue_wait_p50_s"],
            "queue_wait_p95_s": lat["queue_wait_p95_s"],
            "ttft_p50_s": lat["ttft_p50_s"], "ttft_p95_s": lat["ttft_p95_s"],
-           "tpot_p50_s": lat["tpot_p50_s"], "tpot_p95_s": lat["tpot_p95_s"]}
+           "tpot_p50_s": lat["tpot_p50_s"], "tpot_p95_s": lat["tpot_p95_s"],
+           "slo_enabled": slo["enabled"],
+           "slo_attainment": slo["slo_attainment"]}
+    if tracer is not None:
+        # bottleneck attribution over the measured drain's trace: the
+        # wave-level dominant components ride on the row; the full
+        # per-request decomposition goes to --attr-out when asked for
+        from repro.serve.attribution import attribution_report
+        rep = attribution_report(tracer)
+        out["dominant_ttft_component"] = rep["dominant_ttft_component"]
+        out["dominant_tpot_component"] = rep["dominant_tpot_component"]
+        if attr_out:
+            with open(attr_out, "w") as f:
+                json.dump(rep, f, indent=1)
+            print(f"[serve_bench] wrote attribution report -> {attr_out} "
+                  f"({rep['requests']} requests)")
     if paged:
         # a drained pool holds no mapped pages: everything is back on the
         # free list except prefix pages parked evictable-cached (zero
@@ -615,9 +634,76 @@ def prefill_kernel_timing(arch: str = "qwen2-0.5b", *, b: int = 4,
             "backend": jax.default_backend()}
 
 
+def roofline_probe(arch: str = "qwen2-0.5b", *, b: int = 2, lq: int = 8,
+                   pages: int = 16, page_size: int = 8) -> dict:
+    """Eagerly drive decode / prefill / verify once through the kernel
+    route so the attention telemetry holds *timed* calls: the jitted
+    serving path records its traffic at trace time but never wall time
+    (by design — no sync in the hot loop), so achieved GB/s would stay 0
+    without an eager probe.  Returns the three ``op.kernel`` snapshot
+    rows."""
+    from repro.kernels.decode_attn import decode_attn_policy
+    from repro.kernels.paged_attn import (attn_telemetry, paged_attn,
+                                          paged_prefill_attn,
+                                          paged_verify_attn)
+    cfg = get_config(arch).reduced()
+    hq, hkv = cfg.n_heads, cfg.kv_heads
+    d = cfg.resolved_head_dim
+    rng = np.random.default_rng(0)
+    kp = jnp.asarray(rng.standard_normal((pages, page_size, hkv, d)),
+                     jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((pages, page_size, hkv, d)),
+                     jnp.float32)
+    p_max = pages // b
+    tbl = jnp.asarray(rng.permutation(pages)[:b * p_max]
+                      .reshape(b, p_max).astype(np.int32))
+    off = jnp.asarray(rng.integers(page_size, (p_max - 1) * page_size - lq,
+                                   size=b).astype(np.int32))
+    ln = off + lq
+    q1 = jnp.asarray(rng.standard_normal((b, hq, d)), jnp.float32)
+    qk = jnp.asarray(rng.standard_normal((b, lq, hq, d)), jnp.float32)
+    tel = attn_telemetry()
+    was = tel.enabled
+    tel.enable()
+    with decode_attn_policy(mode="kernel", interpret=True):
+        paged_attn(q1, kp, vp, tbl, ln, interpret=True)
+        paged_prefill_attn(qk, kp, vp, tbl, off, ln)
+        paged_verify_attn(qk, kp, vp, tbl, off, ln)
+    snap = tel.snapshot()
+    if not was:
+        tel.disable()
+    return {k: snap[k] for k in ("decode.kernel", "prefill.kernel",
+                                 "verify.kernel") if k in snap}
+
+
+def print_roofline() -> None:
+    """Dump the live roofline/amenability accounting accumulated by the
+    run so far: per-(op, route) traffic, op/byte and achieved GB/s, then
+    the paper's amenability verdict over the measured op mix."""
+    from repro.kernels.paged_attn import amenability_reports, attn_telemetry
+    snap = attn_telemetry().snapshot()
+    if not snap:
+        return
+    print("[roofline] analytic traffic per (op, route) — dead pages "
+          "subtracted; GB/s over eagerly-timed calls only")
+    for key, row in snap.items():
+        print(f"  {key:<16} {row['calls']:>4} calls "
+              f"({row['traced_calls']} traced), "
+              f"{row['bytes'] / 1e6:8.2f} MB, "
+              f"op/byte {row['op_byte']:6.2f}, "
+              f"achieved {row['achieved_gbps']:.3f} GB/s")
+    for _op, rep in sorted(amenability_reports().items()):
+        print(rep.summary())
+
+
 def run(table) -> None:
     """Hook for benchmarks.run: engine-vs-seed, dense-vs-paged and
-    prefix-cache rows; also refreshes BENCH_serve.json."""
+    prefix-cache rows plus the paged-attention roofline; also refreshes
+    BENCH_serve.json."""
+    from repro.kernels.paged_attn import attn_telemetry
+    tel = attn_telemetry()
+    tel.reset()
+    tel.enable()
     r = bench(requests=8, max_new=16, batch=4)
     table.add("serve seed per-token loop", r["seed_s"] * 1e9,
               f"{r['seed_tok_s']:.1f} tok/s")
@@ -665,6 +751,12 @@ def run(table) -> None:
               f"{prs['peak_live_slots']} live slots, KV util "
               f"{po['kv_util_mean']:.0%} vs {prs['kv_util_mean']:.0%} "
               f"({po['preemptions']} preemptions)")
+    for key, row in sorted(roofline_probe().items()):
+        table.add(f"paged-attn roofline {key}", row["wall_s"] * 1e9,
+                  f"{row['achieved_gbps']:.3f} GB/s achieved, "
+                  f"op/byte {row['op_byte']:.2f}, "
+                  f"{row['bytes'] / 1e6:.2f} MB moved")
+    tel.disable()
     write_bench_json(full_bench_rows(r, c, p, ch, sc, pr))
 
 
@@ -709,7 +801,22 @@ def main() -> None:
                     help="record the measured drain's request-lifecycle "
                          "trace and write it as Chrome/Perfetto "
                          "trace_event JSON (open at ui.perfetto.dev)")
+    ap.add_argument("--attr-out", default=None, metavar="PATH",
+                    help="write the per-request latency-attribution "
+                         "report (TTFT/TPOT decomposed into queue / "
+                         "prefill / recompute / stall components) as "
+                         "JSON; needs --trace-out")
+    ap.add_argument("--ttft-slo", type=float, default=None, metavar="S",
+                    help="TTFT SLO in seconds: rows gain slo_attainment "
+                         "(smokes default to a generous 60s so the gate "
+                         "is deterministic)")
+    ap.add_argument("--tpot-slo", type=float, default=None, metavar="S",
+                    help="per-output-token SLO in seconds (see "
+                         "--ttft-slo)")
     args = ap.parse_args()
+    if args.attr_out and not args.trace_out:
+        ap.error("--attr-out requires --trace-out (attribution walks "
+                 "the recorded trace)")
     if args.prefix_cache and not args.paged:
         ap.error("--prefix-cache requires --paged")
     if args.optimistic and not args.paged:
@@ -763,6 +870,14 @@ def main() -> None:
                   admission_mode=("optimistic" if args.optimistic
                                   else "reserve"),
                   chaos=chaos, trace_out=args.trace_out,
+                  attr_out=args.attr_out,
+                  # generous default SLOs keep smoke attainment at a
+                  # deterministic 1.0 across runners while still
+                  # exercising the whole monitor path
+                  ttft_slo=(args.ttft_slo if args.ttft_slo is not None
+                            else 60.0),
+                  tpot_slo=(args.tpot_slo if args.tpot_slo is not None
+                            else 60.0),
                   # at the smoke's tiny default prompts a chunk never
                   # splits — make every prompt long enough to take 2+
                   # bites (the shared prefix also feeds --prefix-cache)
@@ -805,21 +920,29 @@ def main() -> None:
             "preempted_token_recompute": r["preempted_token_recompute"],
             "ttft_p50_s": r["ttft_p50_s"], "ttft_p95_s": r["ttft_p95_s"],
             "tpot_p50_s": r["tpot_p50_s"], "tpot_p95_s": r["tpot_p95_s"],
+            "slo_attainment": r["slo_attainment"],
             "pages_reclaimed": bool(r.get("pages_reclaimed", False))}})
+        dom = (f", dominant TTFT {r['dominant_ttft_component']}"
+               if "dominant_ttft_component" in r else "")
         print(f"[serve_bench --smoke] {mode}: {r['tokens']} tokens, "
               f"{r['engine_tok_s']:.1f} tok/s, "
               f"KV util {r['kv_util_mean']:.0%}, "
               f"prefix hit rate {r['prefix_hit_rate']:.0%}, "
               f"acceptance {r['acceptance_rate']:.0%}, "
-              f"preemptions {r['preemptions']} "
+              f"preemptions {r['preemptions']}, "
+              f"SLO attainment {r['slo_attainment']:.0%}{dom} "
               f"on {jax.default_backend()}")
         return
+    from repro.kernels.paged_attn import attn_telemetry
+    attn_telemetry().enable()      # roofline accounting over the full run
     r = bench(args.arch, batch=args.batch, requests=args.requests,
               max_new=args.max_new, max_len=args.max_len,
               sync_every=args.sync_every, paged=args.paged,
               page_size=args.page_size, prefix_cache=args.prefix_cache,
               prefill_chunk=args.prefill_chunk,
-              speculate_k=args.speculate, trace_out=args.trace_out)
+              speculate_k=args.speculate, trace_out=args.trace_out,
+              attr_out=args.attr_out, ttft_slo=args.ttft_slo,
+              tpot_slo=args.tpot_slo)
     mode = ("spec" if args.speculate
             else "paged+prefix" if args.prefix_cache
             else "paged" if args.paged else "dense")
@@ -833,6 +956,11 @@ def main() -> None:
     print(f"  KV utilization      : mean {r['kv_util_mean']:.1%}, "
           f"peak {r['kv_util_peak']:.1%} "
           f"(live tokens / allocated capacity)")
+    if r["slo_enabled"]:
+        print(f"  SLO attainment      : {r['slo_attainment']:.1%} "
+              f"(ttft<={args.ttft_slo}s, tpot<={args.tpot_slo}s)")
+    if "dominant_ttft_component" in r:
+        print(f"  dominant TTFT cost  : {r['dominant_ttft_component']}")
     assert r["speedup"] >= 3.0, \
         f"serving regressed: engine only {r['speedup']:.2f}x the seed loop"
 
@@ -913,6 +1041,8 @@ def main() -> None:
     print(f"[prefill kernel]  pallas(interpret={kt['backend'] != 'tpu'}): "
           f"{kt['kernel_interpret_s'] * 1e3:.1f}ms / call, xla ref: "
           f"{kt['xla_ref_s'] * 1e3:.1f}ms / call on {kt['backend']}")
+    roofline_probe(args.arch)
+    print_roofline()
     write_bench_json(full_bench_rows(r, c, pc, ch, sc, pr))
 
 

@@ -68,9 +68,18 @@ echo "== serving smoke (optimistic admission + forced preemption) =="
 # preempted and every preempted request completed via recompute-on-resume.
 # --trace-out records the run's request-lifecycle trace: the chaos run is
 # the richest one (preempt/resume, chaos instants), so it is the one CI
-# archives as trace_smoke.json and gates below
+# archives as trace_smoke.json and gates below; --attr-out decomposes the
+# same trace into per-request TTFT/TPOT bottleneck components
+# (attribution_report.json rides along as an artifact)
 timeout 300 python benchmarks/serve_bench.py --paged --optimistic --smoke \
-  --trace-out trace_smoke.json
+  --trace-out trace_smoke.json --attr-out attribution_report.json
+
+echo "== flight-recorder drill (forced PageError -> debug bundle) =="
+# crash-only machinery rots unless something crashes: force a real
+# allocator fault mid-run and gate the debug bundle the dying scheduler
+# wrote (loadable, ring events precede the failure round, pool snapshot
+# partitions cover every page); flight_bundle.json rides as an artifact
+timeout 300 python scripts/flight_drill.py --out flight_bundle.json
 
 echo "== bench trajectory vs committed baseline =="
 # fails on throughput collapse / lost hit rate / dead drafter / broken

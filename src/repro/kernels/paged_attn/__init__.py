@@ -1,4 +1,5 @@
-from .ops import (PagedAttnTelemetry, attn_telemetry,  # noqa: F401
+from .ops import (PagedAttnTelemetry, amenability_reports,  # noqa: F401
+                  attn_telemetry,
                   paged_attn, paged_attn_xla,
                   paged_prefill_attn, paged_prefill_attn_pallas,
                   paged_verify_attn)

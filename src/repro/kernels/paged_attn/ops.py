@@ -22,6 +22,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .kernel import paged_attn_kernel
 from .prefill_kernel import paged_prefill_attn_kernel
@@ -47,6 +48,28 @@ class PagedAttnTelemetry:
     * ``wall_s`` — eager-call wall time, measured around a
       ``block_until_ready`` on the op's output.  Only eager calls pay
       this sync; jitted serving paths are untouched by design.
+
+    Roofline accounting (live since PR 8) rides on the same hooks: each
+    call also contributes analytic traffic estimates from its *static*
+    shapes plus the concrete page table/length metadata when available
+    (eager calls — under trace the lengths are abstract and the full
+    sliced table width is assumed live):
+
+    * ``bytes`` — physical HBM traffic: live K/V pages touched (dead
+      pages the kernel's page walk skips are subtracted) × page extent ×
+      dtype width × 2, plus Q read + O write + table reads;
+    * ``flops`` — attention math, 4 × Hq × D per causally-visible
+      (query, kv) pair;
+    * ``onchip_bytes`` — logical K/V reads served by on-chip reuse
+      (GQA group folding, query rows sharing a page) rather than HBM;
+    * ``timed_bytes`` — the ``bytes`` of eager (timed) calls only, so
+      ``achieved_gbps`` divides matched numerator/denominator.
+
+    ``snapshot()`` derives ``achieved_gbps`` (timed bytes over eager
+    wall time) and ``op_byte`` (flops over physical + on-chip bytes —
+    the :class:`~repro.core.amenability.PrimitiveProfile` convention)
+    per ``(op, route)``; :func:`amenability_reports` feeds the
+    aggregates through the paper's amenability test.
     """
 
     def __init__(self):
@@ -63,18 +86,38 @@ class PagedAttnTelemetry:
         self.stats = {}
 
     def _bump(self, op: str, route: str, tokens: int, *,
-              traced: bool = False, wall: float = 0.0) -> None:
+              traced: bool = False, wall: float = 0.0,
+              mem_bytes: float = 0.0, flops: float = 0.0,
+              onchip_bytes: float = 0.0) -> None:
         d = self.stats.setdefault((op, route), {
-            "calls": 0, "traced_calls": 0, "tokens": 0, "wall_s": 0.0})
+            "calls": 0, "traced_calls": 0, "tokens": 0, "wall_s": 0.0,
+            "bytes": 0.0, "flops": 0.0, "onchip_bytes": 0.0,
+            "timed_bytes": 0.0})
         d["calls"] += 1
         d["traced_calls"] += int(traced)
         d["tokens"] += tokens
         d["wall_s"] += wall
+        d["bytes"] += mem_bytes
+        d["flops"] += flops
+        d["onchip_bytes"] += onchip_bytes
+        if not traced:
+            d["timed_bytes"] += mem_bytes
 
     def snapshot(self) -> dict:
-        """Flat ``{"op.route": {...}}`` copy for reporting."""
-        return {f"{op}.{route}": dict(d)
-                for (op, route), d in sorted(self.stats.items())}
+        """Flat ``{"op.route": {...}}`` copy for reporting, with the
+        derived roofline numbers: ``achieved_gbps`` (eager-call bytes
+        over eager-call wall, 0 when nothing was timed) and ``op_byte``
+        (flops over physical + on-chip bytes)."""
+        out: dict = {}
+        for (op, route), d in sorted(self.stats.items()):
+            row = dict(d)
+            row["achieved_gbps"] = (
+                row["timed_bytes"] / row["wall_s"] / 1e9
+                if row["wall_s"] > 0.0 else 0.0)
+            denom = row["bytes"] + row["onchip_bytes"]
+            row["op_byte"] = row["flops"] / denom if denom else 0.0
+            out[f"{op}.{route}"] = row
+        return out
 
 
 _TELEMETRY = PagedAttnTelemetry()
@@ -86,22 +129,140 @@ def attn_telemetry() -> PagedAttnTelemetry:
     return _TELEMETRY
 
 
-def _recorded(op: str, route: str, q: jnp.ndarray, fn, *args, **kw):
+def amenability_reports(pim=None, gpu=None) -> dict:
+    """Run the paper's PIM-amenability test over the *measured* op mix.
+
+    Aggregates the telemetry's per-``(op, route)`` roofline estimates
+    into one :class:`~repro.core.amenability.PrimitiveProfile` per op
+    (decode / prefill / verify, routes summed — the traffic is a
+    property of the math, not the backend) and feeds each through
+    :func:`~repro.core.amenability.run_test`.  This is the live
+    counterpart of the static profiles in ``core``: op/byte and
+    mem-ratio come from what the serving wave actually executed, dead
+    pages and speculative verify rows included.
+
+    Returns ``{op: AmenabilityReport}``; empty when telemetry recorded
+    nothing (disabled, or no paged-attention calls).
+    """
+    from ...core.amenability import Interaction, PrimitiveProfile, run_test
+    interactions = {
+        # one query row, dot-reduce over its resident KV — commutative
+        # page-at-a-time accumulation (flash online softmax)
+        "decode": Interaction.REDUCTION,
+        # chunked causal block: query rows × KV pages interact within
+        # the slot's own pages — localized, co-alignable per slot
+        "prefill": Interaction.LOCALIZED,
+        "verify": Interaction.LOCALIZED,
+    }
+    agg: dict = {}
+    for (op, _route), d in _TELEMETRY.stats.items():
+        a = agg.setdefault(op, {"flops": 0.0, "bytes": 0.0, "onchip": 0.0})
+        a["flops"] += d["flops"]
+        a["bytes"] += d["bytes"]
+        a["onchip"] += d["onchip_bytes"]
+    reports: dict = {}
+    for op, a in sorted(agg.items()):
+        if a["bytes"] + a["onchip"] <= 0.0:
+            continue
+        profile = PrimitiveProfile(
+            name=f"paged-attn/{op}",
+            ops=a["flops"],
+            mem_bytes=a["bytes"],
+            onchip_bytes=a["onchip"],
+            interaction=interactions.get(op, Interaction.IRREGULAR),
+            alignable=True,
+            input_dependent_locality=True,
+            notes="measured mix; page-table indirection makes locality "
+                  "input-dependent (which pages a slot touches is data)")
+        reports[op] = run_test(profile, pim, gpu)
+    return reports
+
+
+def _concrete_i64(x) -> "np.ndarray | None":
+    """``x`` as a host int64 vector, or None when it is abstract."""
+    if x is None or isinstance(x, jax.core.Tracer):
+        return None
+    try:
+        return np.asarray(x, dtype=np.int64).reshape(-1)
+    except (TypeError, ValueError):
+        return None
+
+
+def _traffic(q, k_pages, table, lengths, q_offset=None) -> tuple:
+    """Analytic ``(mem_bytes, flops, onchip_bytes)`` for one call.
+
+    Physical K/V traffic counts only *live* pages — the pages the
+    kernel's walk actually reads.  Decode: ``ceil(lengths[b] / ps)``
+    pages per slot; prefill/verify additionally bounds the walk at the
+    causal end ``q_offset[b] + Lq``.  When lengths/offsets are abstract
+    (the call sits under a jax trace) the full caller-sliced table
+    width is assumed live — an upper bound consistent with the grid the
+    kernel was actually compiled for.
+
+    FLOPs are 4 × Hq × D per causally-visible (query, kv) pair (QKᵀ
+    and PV, 2 each).  On-chip bytes are the logical K/V reads in excess
+    of the physical ones: the GQA group (G query heads per KV head) and
+    the Lq query rows of a chunk re-read each resident page from
+    on-chip storage, not HBM.
+    """
+    b = int(q.shape[0])
+    lq = int(q.shape[1]) if q.ndim == 4 else 1
+    hq = int(q.shape[-2])
+    d = int(q.shape[-1])
+    ps, hkv = int(k_pages.shape[1]), int(k_pages.shape[2])
+    p = int(table.shape[-1])
+    item = jnp.dtype(k_pages.dtype).itemsize
+    qitem = jnp.dtype(q.dtype).itemsize
+
+    ln = _concrete_i64(lengths)
+    off = _concrete_i64(q_offset) if q_offset is not None else None
+    if ln is not None:
+        ln = np.broadcast_to(ln, (b,)).astype(np.int64)
+    if ln is None or (q_offset is not None and off is None):
+        # abstract metadata: the whole sliced table is assumed live
+        kv_end = np.full((b,), p * ps, dtype=np.int64)
+        visible = float(b * lq * p * ps)
+    elif q_offset is None:
+        # decode: one query per slot sees its whole resident context
+        kv_end = np.minimum(ln, p * ps)
+        visible = float(kv_end.sum())
+    else:
+        # prefill/verify: causal suffix rows at absolute depths
+        off = np.broadcast_to(off, (b,)).astype(np.int64)
+        kv_end = np.minimum(np.minimum(ln, off + lq), p * ps)
+        i = np.arange(lq, dtype=np.int64)[None, :]
+        vis = np.minimum(off[:, None] + i + 1, ln[:, None])
+        visible = float(np.clip(vis, 0, p * ps).sum())
+    live_pages = np.minimum((np.maximum(kv_end, 0) + ps - 1) // ps, p)
+    kv_phys = float(live_pages.sum()) * ps * hkv * d * item * 2
+    mem = kv_phys + 2.0 * b * lq * hq * d * qitem + b * p * 4.0
+    flops = 4.0 * hq * d * visible
+    kv_logical = visible * hq * d * item * 2
+    return mem, flops, max(0.0, kv_logical - kv_phys)
+
+
+def _recorded(op: str, route: str, q: jnp.ndarray, fn, *args,
+              traffic: tuple = (0.0, 0.0, 0.0), **kw):
     """Run ``fn(*args, **kw)``, attributing it to ``(op, route)``.
 
     Token volume comes from ``q``'s static shape (B × Lq; Lq = 1 for
     [B, H, D] decode queries).  Traced calls are counted but not timed:
     a ``block_until_ready`` under trace would be wrong twice over (it
-    measures tracing, and it would land inside the caller's jit)."""
+    measures tracing, and it would land inside the caller's jit).
+    ``traffic`` is the caller's :func:`_traffic` estimate, accumulated
+    alongside."""
     tel = _TELEMETRY
     tokens = int(q.shape[0]) * (int(q.shape[1]) if q.ndim == 4 else 1)
+    mem, flops, onchip = traffic
     if isinstance(q, jax.core.Tracer):
-        tel._bump(op, route, tokens, traced=True)
+        tel._bump(op, route, tokens, traced=True, mem_bytes=mem,
+                  flops=flops, onchip_bytes=onchip)
         return fn(*args, **kw)
     t0 = time.perf_counter()
     out = fn(*args, **kw)
     jax.block_until_ready(out)
-    tel._bump(op, route, tokens, wall=time.perf_counter() - t0)
+    tel._bump(op, route, tokens, wall=time.perf_counter() - t0,
+              mem_bytes=mem, flops=flops, onchip_bytes=onchip)
     return out
 
 
@@ -136,6 +297,7 @@ def paged_attn(q: jnp.ndarray, k_pages: jnp.ndarray, v_pages: jnp.ndarray,
                                interpret=interpret)
     return _recorded("decode", "kernel", q, _paged_attn_jit,
                      q, k_pages, v_pages, table, lengths,
+                     traffic=_traffic(q, k_pages, table, lengths),
                      interpret=interpret)
 
 
@@ -146,7 +308,8 @@ def paged_attn_xla(q: jnp.ndarray, k_pages: jnp.ndarray,
     off-TPU where the Pallas interpreter would sit in the hot loop)."""
     if _TELEMETRY.enabled:
         return _recorded("decode", "xla", q, _paged_attn_xla_impl,
-                         q, k_pages, v_pages, table, lengths)
+                         q, k_pages, v_pages, table, lengths,
+                         traffic=_traffic(q, k_pages, table, lengths))
     return _paged_attn_xla_impl(q, k_pages, v_pages, table, lengths)
 
 
@@ -213,6 +376,8 @@ def paged_prefill_attn(q: jnp.ndarray, k_pages: jnp.ndarray,
             op = _op or ("decode" if q.shape[1] == 1 else "prefill")
             return _recorded(op, "kernel", q, paged_prefill_attn_pallas,
                              q, k_pages, v_pages, table, q_offset, kv_len,
+                             traffic=_traffic(q, k_pages, table, kv_len,
+                                              q_offset=q_offset),
                              interpret=pol.resolve_interpret())
         return paged_prefill_attn_pallas(q, k_pages, v_pages, table,
                                          q_offset, kv_len,
@@ -221,7 +386,9 @@ def paged_prefill_attn(q: jnp.ndarray, k_pages: jnp.ndarray,
     if _TELEMETRY.enabled:
         op = _op or ("decode" if q.shape[1] == 1 else "prefill")
         return _recorded(op, "xla", q, paged_prefill_attn_ref,
-                         q, k_pages, v_pages, table, q_offset, kv_len)
+                         q, k_pages, v_pages, table, q_offset, kv_len,
+                         traffic=_traffic(q, k_pages, table, kv_len,
+                                          q_offset=q_offset))
     return paged_prefill_attn_ref(q, k_pages, v_pages, table,
                                   q_offset, kv_len)
 

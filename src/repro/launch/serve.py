@@ -30,7 +30,9 @@ def run(arch: str, *, reduced: bool = True, requests: int = 4,
         prefill_round_tokens: int | None = None,
         speculate_k: int | None = None,
         speculate_ngram: int = 2, optimistic: bool = False,
-        trace_out: str | None = None) -> dict:
+        trace_out: str | None = None,
+        ttft_slo: float | None = None,
+        tpot_slo: float | None = None) -> dict:
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -46,7 +48,8 @@ def run(arch: str, *, reduced: bool = True, requests: int = 4,
                        speculate_ngram=speculate_ngram,
                        admission_mode="optimistic" if optimistic
                        else "reserve",
-                       telemetry=bool(trace_out))
+                       telemetry=bool(trace_out),
+                       ttft_slo_s=ttft_slo, tpot_slo_s=tpot_slo)
     b = Batcher(model, params, scfg, eos_id=eos_id, seed=seed)
     rng = np.random.default_rng(seed)
     system = rng.integers(0, cfg.vocab, size=shared_prefix).tolist()
@@ -85,18 +88,34 @@ def run(arch: str, *, reduced: bool = True, requests: int = 4,
                  f"preemptions, {kstats['recompute_tokens']} tokens "
                  "recomputed)")
     lat = b.latency_stats()
+    slo = b.slo_stats()
     print(f"[serve] {len(results)} requests, {toks} tokens in {dt:.1f}s "
           f"({toks / dt:.1f} tok/s on {jax.default_backend()}, {mode}, "
           f"KV util {util['mean_util']:.0%}, TTFT p50 "
           f"{lat['ttft_p50_s'] * 1e3:.0f}ms)")
+    if slo["enabled"]:
+        print(f"[serve] SLO attainment {slo['slo_attainment']:.0%} "
+              f"(ttft<={ttft_slo}s, tpot<={tpot_slo}s; burn rate "
+              f"ttft {slo['burn_rate_ttft']:.2f} / "
+              f"tpot {slo['burn_rate_tpot']:.2f} over the last "
+              f"{slo['window']} samples)")
+    attribution = None
     if trace_out:
+        from ..serve.attribution import attribution_report
+        attribution = attribution_report(b.telemetry)
+        if attribution["requests"]:
+            dom = attribution["dominant_ttft_component"]
+            share = attribution["ttft"][dom]["share"]
+            print(f"[serve] dominant TTFT component: {dom} "
+                  f"({share:.0%} of total TTFT across "
+                  f"{attribution['requests']} requests)")
         b.telemetry.to_perfetto(trace_out)
         print(f"[serve] wrote Perfetto trace -> {trace_out} "
               f"({len(b.telemetry.events)} events; open at "
               "ui.perfetto.dev)")
     return {"results": results, "tok_per_s": toks / dt, "kv_util": util,
             "prefix": pstats, "spec": sstats, "latency": lat,
-            "preempt": kstats}
+            "preempt": kstats, "slo": slo, "attribution": attribution}
 
 
 def main() -> None:
@@ -161,7 +180,15 @@ def main() -> None:
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="record the run's request-lifecycle trace and "
                          "write it as Chrome/Perfetto trace_event JSON "
-                         "(open at ui.perfetto.dev)")
+                         "(open at ui.perfetto.dev); also prints the "
+                         "dominant TTFT bottleneck component from the "
+                         "latency-attribution report")
+    ap.add_argument("--ttft-slo", type=float, default=None, metavar="S",
+                    help="TTFT SLO in seconds: the run reports per-class "
+                         "attainment and windowed burn rate")
+    ap.add_argument("--tpot-slo", type=float, default=None, metavar="S",
+                    help="per-output-token SLO in seconds (see "
+                         "--ttft-slo)")
     args = ap.parse_args()
     run(args.arch, reduced=args.reduced, requests=args.requests,
         max_new=args.max_new, batch=args.batch, max_len=args.max_len,
@@ -172,7 +199,8 @@ def main() -> None:
         admission=args.admission, prefill_chunk=args.prefill_chunk,
         prefill_round_tokens=args.prefill_round_tokens,
         speculate_k=args.speculate, speculate_ngram=args.speculate_ngram,
-        optimistic=args.optimistic, trace_out=args.trace_out)
+        optimistic=args.optimistic, trace_out=args.trace_out,
+        ttft_slo=args.ttft_slo, tpot_slo=args.tpot_slo)
 
 
 if __name__ == "__main__":

@@ -114,6 +114,28 @@ class ServeConfig:
     # to the jitted closures (all instrumentation sits at host-sync /
     # scheduling-round boundaries, never inside lax.scan).
     telemetry: bool = False
+    # SLO monitor (repro.serve.scheduler.slo_stats): per-request latency
+    # targets.  None disables the check for that metric (attainment is
+    # vacuously 1.0); with a target set, every observed TTFT/TPOT is
+    # scored against it per priority class, and ``slo_target`` is the
+    # attainment objective the windowed burn rate is normalized by
+    # (burn rate 1.0 = violating exactly the error budget, > 1.0 =
+    # burning it faster than the target allows).
+    ttft_slo_s: float | None = None
+    tpot_slo_s: float | None = None
+    slo_target: float = 0.9
+    # flight recorder: an always-on bounded ring buffer of lifecycle
+    # events (cheap enough to run untraced — host dict appends at
+    # scheduling-round boundaries, no device syncs, no pool gauge
+    # callback).  When a PageError escapes the run loop (pool/prefix
+    # invariant trip, allocator exhaustion with no victim), the batcher
+    # dumps the last ``flight_events`` events + pool snapshot + slot
+    # table + config as a debug bundle (``Batcher.last_flight_bundle``,
+    # written to ``flight_path`` / $REPRO_FLIGHT_PATH when set) before
+    # re-raising — every CI failure ships its own postmortem.
+    flight_recorder: bool = True
+    flight_events: int = 256
+    flight_path: str | None = None
 
     @property
     def max_pages(self) -> int:

@@ -405,6 +405,20 @@ class KVPool:
                 raise PageError(f"table row {slot} has stale tail entries"
                                 + self._slot_snapshot(slot))
 
+    def snapshot(self) -> dict:
+        """JSON-serializable allocator state — the pool section of the
+        scheduler's flight-recorder bundle (and a debugging aid on its
+        own: every partition, every slot's table, every refcount)."""
+        return {"n_pages": self.n_pages,
+                "page_size": self.page_size,
+                "max_pages": self.max_pages,
+                "free": sorted(self._free),
+                "cached": sorted(self._cached),
+                "preempted": sorted(self._preempted),
+                "held": sorted(self._held),
+                "slot_pages": [list(p) for p in self._slot_pages],
+                "refcount": [int(c) for c in self.refcount]}
+
     def utilization(self, live_tokens: int) -> float:
         """live tokens / token capacity mapped by live slots (1.0 = no
         page waste; prefix sharing can push this *above* 1.0 — several

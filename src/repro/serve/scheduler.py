@@ -170,6 +170,9 @@ recovery path), with optional per-round ``KVPool.check()`` /
 from __future__ import annotations
 
 import collections
+import dataclasses
+import json
+import os
 import time
 
 import jax
@@ -214,6 +217,18 @@ class ContinuousBatcher:
         self.metrics = MetricsRegistry()
         self.telemetry = (telemetry if telemetry is not None
                           else Tracer() if cfg.telemetry else None)
+        # flight recorder: an always-on bounded ring of the same
+        # lifecycle events (host dict appends only — no spans, no pool
+        # gauge callback, no device syncs, so the traced==untraced
+        # parity contract holds).  Dumped as a debug bundle when a
+        # PageError escapes the run loop (see ``_dump_flight``).
+        self.flight = (Tracer(ring=cfg.flight_events)
+                       if cfg.flight_recorder else None)
+        self.last_flight_bundle: dict | None = None
+        # SLO accounting: priority classes that have scored at least one
+        # sample (the met/total counters themselves live in the
+        # registry, so ``reset_stats`` clears them with everything else)
+        self._slo_classes: set[int] = set()
         self.queue: collections.deque[tuple[int, list[int]]] = \
             collections.deque()
         self.results: dict[int, list[int]] = {}
@@ -443,15 +458,34 @@ class ContinuousBatcher:
 
     def _trace(self, kind: str, rid: int | None,
                slot: int | None = None, **attrs) -> None:
-        tr = self.telemetry
-        if tr is None:
+        tr, fl = self.telemetry, self.flight
+        if tr is None and fl is None:
             return
         pages = (len(self.pool.slot_pages(slot))
                  if self.pool is not None and slot is not None else 0)
         free = self.pool.free_pages if self.pool is not None else 0
-        tr.event(kind, rid, round=self.round, slot=slot,
-                 pages_held=attrs.pop("pages_held", pages),
-                 pool_free=attrs.pop("pool_free", free), **attrs)
+        pages_held = attrs.pop("pages_held", pages)
+        pool_free = attrs.pop("pool_free", free)
+        if tr is not None:
+            tr.event(kind, rid, round=self.round, slot=slot,
+                     pages_held=pages_held, pool_free=pool_free, **attrs)
+        if fl is not None:
+            fl.event(kind, rid, round=self.round, slot=slot,
+                     pages_held=pages_held, pool_free=pool_free, **attrs)
+
+    def _slo_observe(self, metric: str, rid: int, v: float) -> None:
+        """Score one observed latency against its configured SLO, per
+        priority class.  No-op (beyond the attribute test) when the SLO
+        for that metric is unset."""
+        slo = (self.cfg.ttft_slo_s if metric == "ttft"
+               else self.cfg.tpot_slo_s)
+        if slo is None:
+            return
+        cls = self.req_priority.get(rid, 0)
+        self._slo_classes.add(cls)
+        self.metrics.inc(f"slo.{metric}_total.c{cls}")
+        if v <= slo:
+            self.metrics.inc(f"slo.{metric}_met.c{cls}")
 
     # ------------------------------------------------------------------
     def submit(self, rid: int, prompt: list[int],
@@ -836,7 +870,8 @@ class ContinuousBatcher:
             prefix_lens[slot] = depth
             self.metrics.inc("prefill.computed_tokens", len(piece))
             self._trace("PREFILL_CHUNK", rid, slot=slot,
-                        tokens=len(piece), depth=depth, commit=commit)
+                        tokens=len(piece), depth=depth, commit=commit,
+                        recompute=rid in self._resumed)
             if rid in self._resumed:
                 # prefill spent re-admitting a preempted request — the
                 # direct cost of recompute-on-resume
@@ -887,6 +922,7 @@ class ContinuousBatcher:
                 # a resumed request keeps its original first-token stamp
                 self._first_tok_t[rid] = now
                 self.metrics.observe("lat.ttft_s", now - self._clock0)
+                self._slo_observe("ttft", rid, now - self._clock0)
                 self._trace("FIRST_TOKEN", rid, slot=slot, token=tokv,
                             ttft_s=now - self._clock0)
             if self.spec_k:
@@ -899,13 +935,17 @@ class ContinuousBatcher:
                 self.slot_rid[slot] = None
                 self._resumed.discard(rid)
                 self._preempt_counts.pop(rid, None)
-                self._trace("RETIRE", rid, slot=slot, tokens=len(out))
-                self._release_slot(slot)
+                tpot = 0.0
                 if (self._clock0 is not None and len(out) > 1
                         and rid in self._first_tok_t):
-                    self.metrics.observe(
-                        "lat.tpot_s",
-                        (now - self._first_tok_t[rid]) / (len(out) - 1))
+                    tpot = ((now - self._first_tok_t[rid])
+                            / (len(out) - 1))
+                self._trace("RETIRE", rid, slot=slot, tokens=len(out),
+                            tpot_s=tpot)
+                self._release_slot(slot)
+                if tpot > 0.0:
+                    self.metrics.observe("lat.tpot_s", tpot)
+                    self._slo_observe("tpot", rid, tpot)
             else:
                 self.slot_rid[slot] = rid
                 self.slot_budget[slot] = max_new
@@ -954,18 +994,20 @@ class ContinuousBatcher:
                         self.slot_rid[i] = None
                         self._resumed.discard(rid)
                         self._preempt_counts.pop(rid, None)
+                        tpot = 0.0
+                        if (self._clock0 is not None and len(out) > 1
+                                and rid in self._first_tok_t):
+                            tpot = ((now - self._first_tok_t[rid])
+                                    / (len(out) - 1))
                         self._trace("RETIRE", rid, slot=i,
-                                    tokens=len(out))
+                                    tokens=len(out), tpot_s=tpot)
                         # exact reclamation at this segment edge: private
                         # pages go back to the free list, registered
                         # prefix pages park evictable-cached for matches
                         self._release_slot(i)
-                        if (self._clock0 is not None and len(out) > 1
-                                and rid in self._first_tok_t):
-                            self.metrics.observe(
-                                "lat.tpot_s",
-                                (now - self._first_tok_t[rid])
-                                / (len(out) - 1))
+                        if tpot > 0.0:
+                            self.metrics.observe("lat.tpot_s", tpot)
+                            self._slo_observe("tpot", rid, tpot)
                         break
                 if self.spec_k and burst:
                     # one verify step committed ``burst`` tokens: burst-1
@@ -976,7 +1018,8 @@ class ContinuousBatcher:
                     self.metrics.inc("spec.emitted", burst)
                     self._trace("SPEC_COMMIT", rid, slot=i, step=t,
                                 committed=burst,
-                                accepted_drafts=burst - 1)
+                                accepted_drafts=burst - 1,
+                                proposed=self.spec_k)
                 if self.slot_rid[i] is None:
                     break
                 if burst == 0:
@@ -1030,84 +1073,141 @@ class ContinuousBatcher:
                     f"(max {self.pool.max_pages}/slot)")
         idle_rounds = 0
         tr = self.telemetry
-        while self.queue or any(r is not None for r in self.slot_rid):
-            self.round += 1
-            if self.chaos is not None:
-                if tr is not None:
-                    with tr.span("chaos", self.round):
+        try:
+            while self.queue or any(r is not None for r in self.slot_rid):
+                self.round += 1
+                if self.chaos is not None:
+                    if tr is not None:
+                        with tr.span("chaos", self.round):
+                            self.chaos.on_round(self)
+                    else:
                         self.chaos.on_round(self)
-                else:
-                    self.chaos.on_round(self)
-            self._refill(max_new)
-            if not any(r is not None and not self.slot_pending[i]
-                       for i, r in enumerate(self.slot_rid)):
-                # nothing is decoding: if slots are still PREFILLING (or
-                # the queue is waiting on pages) the next refill round
-                # advances their chunks — a decode segment would only
-                # burn a scan on all-done rows
-                if self.queue or any(r is not None for r in self.slot_rid):
-                    if not any(r is not None for r in self.slot_rid):
-                        # queue blocked with zero live slots: admission
-                        # must succeed within a bounded number of rounds
-                        # (only a chaos hold can defer it) — a spin past
-                        # the bound is a deadlock, not a wait
-                        idle_rounds += 1
-                        if idle_rounds > 100_000:
-                            raise RuntimeError(
-                                "admission stalled: queue non-empty, no "
-                                "live slots, and 100000 rounds without "
-                                "progress (pages held outside the pool?)")
+                self._refill(max_new)
+                if not any(r is not None and not self.slot_pending[i]
+                           for i, r in enumerate(self.slot_rid)):
+                    # nothing is decoding: if slots are still PREFILLING
+                    # (or the queue is waiting on pages) the next refill
+                    # round advances their chunks — a decode segment
+                    # would only burn a scan on all-done rows
+                    if self.queue or any(r is not None
+                                         for r in self.slot_rid):
+                        if not any(r is not None for r in self.slot_rid):
+                            # queue blocked with zero live slots:
+                            # admission must succeed within a bounded
+                            # number of rounds (only a chaos hold can
+                            # defer it) — a spin past the bound is a
+                            # deadlock, not a wait
+                            idle_rounds += 1
+                            if idle_rounds > 100_000:
+                                raise RuntimeError(
+                                    "admission stalled: queue non-empty, "
+                                    "no live slots, and 100000 rounds "
+                                    "without progress (pages held "
+                                    "outside the pool?)")
+                        continue
+                    break
+                idle_rounds = 0
+                # optimistic admission: make every decoding slot's page
+                # table cover this segment's worst-case advance,
+                # preempting on pressure — may evict every decoding slot
+                # (chaos holds), in which case the next refill round
+                # re-admits from the queue
+                self._ensure_decode_pages(steps)
+                if not any(r is not None and not self.slot_pending[i]
+                           for i, r in enumerate(self.slot_rid)):
                     continue
-                break
-            idle_rounds = 0
-            # optimistic admission: make every decoding slot's page table
-            # cover this segment's worst-case advance, preempting on
-            # pressure — may evict every decoding slot (chaos holds), in
-            # which case the next refill round re-admits from the queue
-            self._ensure_decode_pages(steps)
-            if not any(r is not None and not self.slot_pending[i]
-                       for i, r in enumerate(self.slot_rid)):
-                continue
-            self._sample_kv()
-            seg_t0 = time.perf_counter() if tr is not None else 0.0
-            if self.spec_k:
-                cap = self._page_cap()
-                loop = self._loop(steps, cap)
-                pages = jnp.asarray(self.pool.table[:, :cap])
-                hist = jnp.asarray(self.history)
-                ((self.tok, self.caches, self.lengths, self.done,
-                  self.remaining, self.key, hist), emitted) = loop(
-                    self.params, self.tok, self.caches, self.lengths,
-                    self.done, self.remaining, self.key, hist, pages)
-                # np.array (not asarray): the device export is read-only
-                # and the next join writes prompts into this mirror
-                self.history = np.array(hist)
-            elif self.pool is not None:
-                cap = self._page_cap()
-                loop = self._loop(steps, cap)
-                pages = jnp.asarray(self.pool.table[:, :cap])
-                ((self.tok, self.caches, self.lengths, self.done,
-                  self.remaining, self.key), emitted) = loop(
-                    self.params, self.tok, self.caches, self.lengths,
-                    self.done, self.remaining, self.key, pages)
-            else:
-                loop = self._loop(steps, self._kv_cap(steps))
-                ((self.tok, self.caches, self.lengths, self.done,
-                  self.remaining, self.key), emitted) = loop(
-                    self.params, self.tok, self.caches, self.lengths,
-                    self.done, self.remaining, self.key)
-            if tr is not None:
-                # block so the segment span measures device wall time,
-                # not dispatch — a tracing-on-only sync (the off path's
-                # sync stays where it always was: np.asarray below)
-                jax.block_until_ready(emitted)
-                tr.add_span("decode-segment", self.round, seg_t0,
-                            time.perf_counter())
-                with tr.span("collect", self.round):
+                self._sample_kv()
+                seg_t0 = time.perf_counter() if tr is not None else 0.0
+                if self.spec_k:
+                    cap = self._page_cap()
+                    loop = self._loop(steps, cap)
+                    pages = jnp.asarray(self.pool.table[:, :cap])
+                    hist = jnp.asarray(self.history)
+                    ((self.tok, self.caches, self.lengths, self.done,
+                      self.remaining, self.key, hist), emitted) = loop(
+                        self.params, self.tok, self.caches, self.lengths,
+                        self.done, self.remaining, self.key, hist, pages)
+                    # np.array (not asarray): the device export is
+                    # read-only and the next join writes prompts into
+                    # this mirror
+                    self.history = np.array(hist)
+                elif self.pool is not None:
+                    cap = self._page_cap()
+                    loop = self._loop(steps, cap)
+                    pages = jnp.asarray(self.pool.table[:, :cap])
+                    ((self.tok, self.caches, self.lengths, self.done,
+                      self.remaining, self.key), emitted) = loop(
+                        self.params, self.tok, self.caches, self.lengths,
+                        self.done, self.remaining, self.key, pages)
+                else:
+                    loop = self._loop(steps, self._kv_cap(steps))
+                    ((self.tok, self.caches, self.lengths, self.done,
+                      self.remaining, self.key), emitted) = loop(
+                        self.params, self.tok, self.caches, self.lengths,
+                        self.done, self.remaining, self.key)
+                if tr is not None:
+                    # block so the segment span measures device wall
+                    # time, not dispatch — a tracing-on-only sync (the
+                    # off path's sync stays where it always was:
+                    # np.asarray below)
+                    jax.block_until_ready(emitted)
+                    tr.add_span("decode-segment", self.round, seg_t0,
+                                time.perf_counter())
+                    with tr.span("collect", self.round):
+                        self._collect(np.asarray(emitted))
+                else:
                     self._collect(np.asarray(emitted))
-            else:
-                self._collect(np.asarray(emitted))
+        except PageError as err:
+            # postmortem before the crash propagates: the flight
+            # recorder's ring holds the last N lifecycle events leading
+            # up to the invariant trip — dump them with the allocator
+            # and slot-table state so every CI failure ships its own
+            # debugging bundle
+            self._dump_flight(err)
+            raise
         return self.results
+
+    # ------------------------------------------------------------------
+    # flight recorder
+    # ------------------------------------------------------------------
+    def _dump_flight(self, err: BaseException) -> dict | None:
+        """Assemble (and optionally write) the flight-recorder debug
+        bundle: the ring buffer's last events, the allocator snapshot,
+        the host slot table, the config and the metrics at the moment a
+        PageError escaped the run loop.  Stored on
+        ``self.last_flight_bundle``; written as JSON when
+        ``cfg.flight_path`` (or $REPRO_FLIGHT_PATH) names a file."""
+        if self.flight is None:
+            return None
+        cfg = {k: (v if isinstance(v, (bool, int, float, str, type(None)))
+                   else str(v))
+               for k, v in dataclasses.asdict(self.cfg).items()}
+        bundle = {
+            "schema": 1,
+            "error": f"{type(err).__name__}: {err}",
+            "round": self.round,
+            "config": cfg,
+            "events": self.flight.tail(),
+            "slot_table": {
+                "slot_rid": list(self.slot_rid),
+                "slot_len": list(self.slot_len),
+                "slot_filled": list(self.slot_filled),
+                "slot_budget": list(self.slot_budget),
+                "slot_prior": list(self.slot_prior),
+                "slot_max_tokens": list(self.slot_max_tokens),
+                "pending_tokens": [len(p) for p in self.slot_pending]},
+            "pool": self.pool.snapshot() if self.pool is not None else None,
+            "queue": [[rid, len(p)] for rid, p in self.queue],
+            "preempt_events": list(self.preempt_events),
+            "metrics": self.metrics.snapshot(),
+        }
+        self.last_flight_bundle = bundle
+        path = self.cfg.flight_path or os.environ.get("REPRO_FLIGHT_PATH")
+        if path:
+            with open(path, "w") as f:
+                json.dump(bundle, f, indent=1)
+                f.write("\n")
+        return bundle
 
     # ------------------------------------------------------------------
     # KV memory accounting
@@ -1172,6 +1272,14 @@ class ContinuousBatcher:
         self._clock0 = None
         self._first_tok_t.clear()
         self.metrics.reset()
+        # pool-partition gauges describe *current* allocator state, but
+        # this batcher owns them — clear and immediately re-seed from the
+        # live pool, so a gauge from a previous pool geometry can never
+        # survive into the next wave's snapshot()
+        self.metrics.clear_gauges("pool.")
+        if self.pool is not None and self.pool.gauge_cb is not None:
+            self.pool._notify()
+        self._slo_classes.clear()
         self.kv_samples = []
         self.preempt_events.clear()
         self.preempted_rids.clear()
@@ -1219,6 +1327,62 @@ class ContinuousBatcher:
                 "preemptions": int(m.value("preempt.count")),
                 "preempted_token_recompute":
                     int(m.value("preempt.recompute_tokens"))}
+
+    def slo_stats(self, window: int = 64) -> dict:
+        """SLO attainment and burn rate against ``cfg.ttft_slo_s`` /
+        ``cfg.tpot_slo_s``.
+
+        * ``slo_attainment`` — overall met/total fraction across both
+          metrics and every priority class, always in [0, 1] (vacuously
+          1.0 with no SLO configured or no samples yet — "no target" is
+          never a violation);
+        * ``classes`` — per-priority-class met/total/attainment, so a
+          mixed-priority wave shows *which* class is paying for the
+          preemptions (victims are picked lowest-priority-first, so
+          attainment should be monotone in class under pressure);
+        * ``burn_rate_*`` — violating fraction of the last ``window``
+          raw samples, normalized by the error budget ``1 - slo_target``
+          (1.0 = burning exactly the budget, > 1.0 = on track to miss
+          the target) — the windowed view reacts to a regression long
+          before the cumulative attainment moves.
+        """
+        cfg, m = self.cfg, self.metrics
+        enabled = (cfg.ttft_slo_s is not None
+                   or cfg.tpot_slo_s is not None)
+        classes: dict[int, dict] = {}
+        met_all = total_all = 0
+        for cls in sorted(self._slo_classes):
+            row: dict = {}
+            for metric in ("ttft", "tpot"):
+                tot = int(m.value(f"slo.{metric}_total.c{cls}"))
+                met = int(m.value(f"slo.{metric}_met.c{cls}"))
+                row[f"{metric}_met"] = met
+                row[f"{metric}_total"] = tot
+                row[f"{metric}_attainment"] = met / tot if tot else 1.0
+                met_all += met
+                total_all += tot
+            classes[cls] = row
+        budget = max(1e-9, 1.0 - cfg.slo_target)
+        burn = {}
+        for metric, slo in (("ttft", cfg.ttft_slo_s),
+                            ("tpot", cfg.tpot_slo_s)):
+            if slo is None:
+                burn[metric] = 0.0
+                continue
+            recent = m.samples(f"lat.{metric}_s")[-window:]
+            viol = (sum(1 for v in recent if v > slo) / len(recent)
+                    if recent else 0.0)
+            burn[metric] = viol / budget
+        return {"enabled": enabled,
+                "ttft_slo_s": cfg.ttft_slo_s,
+                "tpot_slo_s": cfg.tpot_slo_s,
+                "slo_target": cfg.slo_target,
+                "slo_attainment": (met_all / total_all
+                                   if total_all else 1.0),
+                "classes": classes,
+                "window": window,
+                "burn_rate_ttft": burn["ttft"],
+                "burn_rate_tpot": burn["tpot"]}
 
     def preempt_stats(self) -> dict:
         """Preemption effectiveness and liveness: how many evictions

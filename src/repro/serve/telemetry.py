@@ -55,6 +55,7 @@ from __future__ import annotations
 
 import json
 import time
+from collections import deque
 from contextlib import contextmanager
 
 import numpy as np
@@ -73,24 +74,42 @@ def _pct(a: list[float], q: float) -> float:
 DEFAULT_BUCKETS_S = (0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05,
                      0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0, 60.0)
 
+# raw-sample reservoir cap: below this every observation is kept verbatim
+# (so smoke/test-scale percentiles are bit-identical to the unbounded
+# list); past it the reservoir decimates deterministically — a long drain
+# no longer grows memory per observation.
+DEFAULT_SAMPLE_CAP = 4096
+
 
 class _Histogram:
-    """Fixed-bucket histogram that also keeps its raw samples.
+    """Fixed-bucket histogram that also keeps a bounded raw reservoir.
 
-    The bucket counts are the fixed-cost aggregate (exportable without
-    the samples); the raw list is what the legacy stats views' percentile
-    math reads — keeping both means the registry refactor changes no
-    reported number.
+    The bucket counts plus the running ``count`` / ``sum`` are the
+    fixed-cost aggregates (exportable without the samples); the raw list
+    is what the legacy stats views' percentile math reads.  Up to ``cap``
+    observations the list is exact — the registry refactor changes no
+    reported number at test scale.  At ``cap`` the reservoir halves
+    (every other sample dropped) and the keep-stride doubles, so a drain
+    of any length holds at most ``cap`` floats while still covering the
+    whole observation history at uniform (power-of-two) spacing.
     """
 
-    __slots__ = ("bounds", "counts", "samples")
+    __slots__ = ("bounds", "counts", "samples", "count", "sum",
+                 "cap", "_stride", "_seen")
 
-    def __init__(self, bounds: tuple[float, ...] = DEFAULT_BUCKETS_S):
+    def __init__(self, bounds: tuple[float, ...] = DEFAULT_BUCKETS_S,
+                 cap: int = DEFAULT_SAMPLE_CAP):
         self.bounds = tuple(bounds)
         self.counts = [0] * (len(self.bounds) + 1)
         self.samples: list[float] = []
+        self.count = 0
+        self.sum = 0.0
+        self.cap = max(2, int(cap))
+        self._stride = 1
+        self._seen = 0
 
     def observe(self, v: float) -> None:
+        v = float(v)
         i = 0
         for i, b in enumerate(self.bounds):
             if v <= b:
@@ -98,11 +117,22 @@ class _Histogram:
         else:
             i = len(self.bounds)
         self.counts[i] += 1
-        self.samples.append(float(v))
+        self.count += 1
+        self.sum += v
+        if self._seen % self._stride == 0:
+            self.samples.append(v)
+            if len(self.samples) >= self.cap:
+                del self.samples[1::2]       # deterministic decimation
+                self._stride *= 2
+        self._seen += 1
 
     def reset(self) -> None:
         self.counts = [0] * (len(self.bounds) + 1)
-        self.samples.clear()
+        self.samples.clear()                 # in place: stats views alias
+        self.count = 0
+        self.sum = 0.0
+        self._stride = 1
+        self._seen = 0
 
 
 class MetricsRegistry:
@@ -147,10 +177,12 @@ class MetricsRegistry:
         return self.hist(name).samples
 
     def count(self, name: str) -> int:
-        return len(self.hist(name).samples)
+        """Total observations (running counter — survives reservoir
+        decimation, costs nothing to read)."""
+        return self.hist(name).count
 
     def sum(self, name: str) -> float:
-        return float(sum(self.hist(name).samples))
+        return float(self.hist(name).sum)
 
     def percentile(self, name: str, q: float) -> float:
         """Empty-guarded percentile over the raw samples — the one
@@ -159,24 +191,37 @@ class MetricsRegistry:
         return _pct(self.hist(name).samples, q)
 
     # -- lifecycle -----------------------------------------------------
-    def reset(self) -> None:
-        """Zero every counter and histogram (gauges describe *current*
-        state, not accumulation, so they survive).  This is the whole
-        per-wave measurement reset — a counter that lives here cannot be
-        forgotten by ``reset_stats`` again."""
+    def reset(self, gauges: bool = False) -> None:
+        """Zero every counter and histogram.  Gauges describe *current*
+        state, not accumulation, so they survive by default — but a
+        caller that is discarding the state they describe (the scheduler
+        rebuilding its pool between waves) passes ``gauges=True`` so a
+        stale geometry cannot leak into the next wave's ``snapshot()``.
+        This is the whole per-wave measurement reset — a counter that
+        lives here cannot be forgotten by ``reset_stats`` again."""
         self._counters.clear()
         for h in self._hists.values():
             h.reset()
+        if gauges:
+            self._gauges.clear()
+
+    def clear_gauges(self, prefix: str) -> None:
+        """Drop every gauge under ``prefix`` (e.g. ``"pool."`` when the
+        pool that set them is torn down)."""
+        for name in [n for n in self._gauges if n.startswith(prefix)]:
+            del self._gauges[name]
 
     def snapshot(self) -> dict:
         """One flat dict of everything: counters verbatim, gauges under
         their name, histograms as ``name.count`` / ``name.sum`` /
-        ``name.p50`` / ``name.p95``."""
+        ``name.p50`` / ``name.p95`` (running aggregates — nothing is
+        recomputed over raw lists here except the percentiles, which
+        read the bounded reservoir)."""
         out: dict[str, float] = dict(self._counters)
         out.update(self._gauges)
         for name, h in self._hists.items():
-            out[f"{name}.count"] = len(h.samples)
-            out[f"{name}.sum"] = float(sum(h.samples))
+            out[f"{name}.count"] = h.count
+            out[f"{name}.sum"] = float(h.sum)
             out[f"{name}.p50"] = _pct(h.samples, 50)
             out[f"{name}.p95"] = _pct(h.samples, 95)
         return out
@@ -202,14 +247,27 @@ class Tracer:
     call site with ``if tracer is not None`` so the off path costs
     nothing.  Timestamps are ``time.perf_counter()`` seconds relative to
     construction (``t0``); the Perfetto export converts to microseconds.
+
+    ``ring=N`` turns the recorder into a bounded flight recorder: events,
+    spans and pool samples live in ``deque(maxlen=...)`` ring buffers, so
+    an arbitrarily long run holds at most the last N events — cheap
+    enough to leave on even when full tracing is off.  The scheduler runs
+    one such tracer unconditionally and dumps its tail as a debug bundle
+    when a pool/prefix invariant trips (see ``Batcher.flight_bundle``).
     """
 
-    def __init__(self, clock=time.perf_counter):
+    def __init__(self, clock=time.perf_counter, ring: int | None = None):
         self._clock = clock
         self.t0 = clock()
-        self.events: list[dict] = []
-        self.spans: list[dict] = []
-        self.pool_samples: list[tuple[float, dict]] = []
+        self.ring = ring
+        if ring is None:
+            self.events: list[dict] = []
+            self.spans: list[dict] = []
+            self.pool_samples: list[tuple[float, dict]] = []
+        else:
+            self.events = deque(maxlen=int(ring))
+            self.spans = deque(maxlen=int(ring))
+            self.pool_samples = deque(maxlen=int(ring))
 
     def now(self) -> float:
         return self._clock()
@@ -245,6 +303,12 @@ class Tracer:
         """Pool-partition sample (called from ``KVPool.gauge_cb`` after
         every allocator mutation)."""
         self.pool_samples.append((self._clock(), dict(counts)))
+
+    def tail(self) -> list[dict]:
+        """The retained events, oldest first, as plain copies — the
+        flight-recorder bundle payload (for an unbounded tracer this is
+        simply every event)."""
+        return [dict(e) for e in self.events]
 
     # -- plain export --------------------------------------------------
     def rids(self) -> list[int]:
