@@ -634,6 +634,51 @@ def prefill_kernel_timing(arch: str = "qwen2-0.5b", *, b: int = 4,
             "backend": jax.default_backend()}
 
 
+def autotune_compare(arch: str = "qwen2-0.5b", *, ops=None, b: int = 2,
+                     lq: int = 8, pages: int = 16, page_size: int = 8,
+                     budget: int | None = 8, reps: int = 3, seed: int = 0,
+                     tuned_out: str | None = None) -> dict:
+    """Generalize ``prefill_kernel_timing`` across the whole paged_attn
+    family: sweep every launch config the kernels accept per op (grid
+    order; row-fold tiling on prefill/verify), analytically prune with
+    the roofline traffic model, benchmark survivors through the kernel
+    telemetry hooks, and report one ``autotune-<op>`` row per op with
+    the per-candidate measurements attached.  Winners optionally persist
+    to ``tuned_out`` in the tuned-shape cache schema so the row is also
+    the provenance record for the committed cache."""
+    from repro.kernels.paged_attn import autotune as at
+    cfg = get_config(arch).reduced()
+    geom = at.Geometry(hq=cfg.n_heads, hkv=cfg.kv_heads,
+                       d=cfg.resolved_head_dim, page_size=page_size)
+    res = at.autotune(tuple(ops or at.OPS), geom=geom, b=b, lq=lq,
+                      pages=pages, budget=budget, reps=reps, seed=seed)
+    rows: dict = {}
+    for op, r in res.items():
+        assert r["winner"] is not None, f"{op}: no winner selected"
+        assert r["winner_wall_s"] <= r["default_wall_s"], \
+            f"{op}: winner slower than the default it was measured against"
+        assert r["achieved_gbps"] > 0, f"{op}: no timed telemetry recorded"
+        rows[f"autotune-{op}"] = {
+            "geometry": geom.key(),
+            "op": op,
+            "winner": r["winner"],
+            "winner_wall_s": r["winner_wall_s"],
+            "default_wall_s": r["default_wall_s"],
+            "achieved_gbps": r["achieved_gbps"],
+            "op_byte": r["op_byte"],
+            "n_candidates": len(r["candidates"]),
+            "n_pruned": len(r["pruned"]),
+            "n_parity_dropped": len(r["parity_dropped"]),
+            "candidates": [
+                {"config": c["config"], "wall_s": round(c["wall_s"], 6),
+                 "achieved_gbps": round(c["achieved_gbps"], 4)}
+                for c in r["candidates"]],
+        }
+    if tuned_out:
+        at.save_entries(res, tuned_out)
+    return rows
+
+
 def roofline_probe(arch: str = "qwen2-0.5b", *, b: int = 2, lq: int = 8,
                    pages: int = 16, page_size: int = 8) -> dict:
     """Eagerly drive decode / prefill / verify once through the kernel
@@ -813,7 +858,40 @@ def main() -> None:
     ap.add_argument("--tpot-slo", type=float, default=None, metavar="S",
                     help="per-output-token SLO in seconds (see "
                          "--ttft-slo)")
+    ap.add_argument("--autotune-compare", action="store_true",
+                    help="standalone kernel-autotune sweep across decode/"
+                         "prefill/verify: enumerate launch configs, prune "
+                         "on the analytic roofline score, benchmark the "
+                         "survivors and write per-candidate rows (config, "
+                         "wall time, achieved GB/s, op/byte) into "
+                         "BENCH_serve.json; with --smoke the sweep is "
+                         "bounded for CI (<=4 measured candidates per op, "
+                         "2 reps).  Runs instead of the serve bench")
+    ap.add_argument("--tuned-out", default=None, metavar="PATH",
+                    help="with --autotune-compare: also persist the "
+                         "winners to this tuned-shape cache file")
     args = ap.parse_args()
+    if args.tuned_out and not args.autotune_compare:
+        ap.error("--tuned-out requires --autotune-compare")
+    if args.autotune_compare:
+        rows = autotune_compare(
+            args.arch,
+            page_size=min(args.page_size, 8) if args.smoke
+            else args.page_size,
+            budget=4 if args.smoke else 8,
+            reps=2 if args.smoke else 3,
+            tuned_out=args.tuned_out)
+        write_bench_json(rows)
+        for name, row in sorted(rows.items()):
+            print(f"[{name}] winner {row['winner']} "
+                  f"{row['winner_wall_s'] * 1e3:.2f}ms "
+                  f"(default {row['default_wall_s'] * 1e3:.2f}ms), "
+                  f"{row['achieved_gbps']:.3f} GB/s over "
+                  f"{row['n_candidates']} measured / "
+                  f"{row['n_pruned']} pruned candidates")
+        if args.tuned_out:
+            print(f"[autotune] winners persisted to {args.tuned_out}")
+        return
     if args.attr_out and not args.trace_out:
         ap.error("--attr-out requires --trace-out (attribution walks "
                  "the recorded trace)")

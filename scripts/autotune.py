@@ -1,0 +1,116 @@
+#!/usr/bin/env python
+"""Sweep the paged-attention kernel family's launch geometry and persist
+the winners to the tuned-shape cache.
+
+Per (op, geometry) this enumerates every launch config the kernels
+accept (grid order for all three ops, row-fold tiling for prefill and
+verify), prunes with the analytic roofline score (infeasible tilings
+never run), benchmarks the survivors through the kernel-timing telemetry
+hooks, parity-gates every candidate bit-exactly against the default
+shape, and writes the wall-time winner to ``benchmarks/tuned_shapes.json``
+keyed ``<backend>|<op>|<geometry>`` — the cache ``DecodeAttnPolicy``
+resolves at construction time.  Page size is a geometry axis (it changes
+the pool layout), so ``--page-sizes`` sweeps it as separate entries.
+
+  PYTHONPATH=src python scripts/autotune.py                 # full sweep
+  python scripts/autotune.py --smoke                        # CI tier
+  python scripts/autotune.py --ops decode --page-sizes 16
+  python scripts/autotune.py --dry-run                      # prune only
+  python scripts/autotune.py --no-save --out /tmp/t.json
+
+``--smoke`` bounds the sweep for CI: one geometry (the first page size),
+at most 8 measured candidates per op, 2 timing reps.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
+
+import jax  # noqa: E402
+
+from repro.configs import get_config                      # noqa: E402
+from repro.kernels.paged_attn import autotune as at       # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--ops", default=",".join(at.OPS),
+                    help="comma-separated subset of decode,prefill,verify")
+    ap.add_argument("--page-sizes", default="8,16",
+                    help="pool page sizes to sweep (each is its own "
+                         "geometry entry)")
+    ap.add_argument("--b", type=int, default=2, help="workload slots")
+    ap.add_argument("--lq", type=int, default=8,
+                    help="prefill/verify query-block tokens")
+    ap.add_argument("--pages", type=int, default=16,
+                    help="pool pages in the workload")
+    ap.add_argument("--budget", type=int, default=None,
+                    help="max measured candidates per op (analytic rank "
+                         "cuts the rest; default: all feasible)")
+    ap.add_argument("--reps", type=int, default=3,
+                    help="timed reps per surviving candidate")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None,
+                    help="cache file to merge winners into (default: the "
+                         "committed benchmarks/tuned_shapes.json)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="bounded CI sweep: first page size only, "
+                         "budget<=8, reps=2")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="enumerate + prune only; nothing is benchmarked "
+                         "or persisted")
+    ap.add_argument("--no-save", action="store_true",
+                    help="benchmark but do not write the cache")
+    args = ap.parse_args()
+
+    ops = tuple(o.strip() for o in args.ops.split(",") if o.strip())
+    bad = [o for o in ops if o not in at.OPS]
+    if bad:
+        ap.error(f"unknown ops {bad}; choose from {at.OPS}")
+    page_sizes = [int(p) for p in args.page_sizes.split(",") if p.strip()]
+    budget, reps = args.budget, args.reps
+    if args.smoke:
+        page_sizes = page_sizes[:1]
+        budget = min(budget or 8, 8)
+        reps = min(reps, 2)
+
+    cfg = get_config(args.arch).reduced()
+    print(f"[autotune] arch={args.arch} backend={jax.default_backend()} "
+          f"ops={','.join(ops)} page_sizes={page_sizes} "
+          f"budget={budget} reps={reps}")
+    for ps in page_sizes:
+        geom = at.Geometry(hq=cfg.n_heads, hkv=cfg.kv_heads,
+                           d=cfg.resolved_head_dim, page_size=ps)
+        if args.dry_run:
+            for op in ops:
+                wl = at.make_workload(op, geom, b=args.b, lq=args.lq,
+                                      pages=args.pages, seed=args.seed)
+                cands, pruned = at.prune(wl, budget=budget)
+                print(f"  {geom.key()} {op}: would run "
+                      f"{[c.label() for c in cands]}; pruned "
+                      f"{[(c.label(), why) for c, why in pruned]}")
+            continue
+        res = at.autotune(ops, geom=geom, b=args.b, lq=args.lq,
+                          pages=args.pages, budget=budget, reps=reps,
+                          seed=args.seed)
+        for op, r in res.items():
+            win = at.Candidate(**r["winner"]).label()
+            print(f"  {geom.key()} {op:<8} winner {win:<12} "
+                  f"{r['winner_wall_s'] * 1e3:7.2f}ms "
+                  f"(default {r['default_wall_s'] * 1e3:7.2f}ms), "
+                  f"{r['achieved_gbps']:.3f} GB/s, "
+                  f"op/byte {r['op_byte']:.2f}  "
+                  f"[{len(r['candidates'])} measured, "
+                  f"{len(r['pruned'])} pruned, "
+                  f"{len(r['parity_dropped'])} parity-dropped]")
+        if not args.no_save:
+            path = at.save_entries(res, args.out)
+            print(f"[autotune] winners merged into {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
 # CI gate: tier-1 tests + serving-throughput liveness checks + the
 # bench-trajectory gate (scripts/check_bench.py vs the committed
-# benchmarks/baselines/serve_baseline.json).
+# benchmarks/baselines/serve_baseline.json) + the kernel tune-smoke
+# (bounded autotune sweep; the tuned-shape cache it writes is gated and
+# uploaded as an artifact).
 #
 #   scripts/ci.sh            # fast tier: -m "not slow" + serve smokes
 #   CI_FULL=1 scripts/ci.sh  # additionally run the slow-marked tests
@@ -39,40 +41,60 @@ fi
 # start the trajectory from scratch: the smokes below must regenerate
 # every gated row, so check_bench fails if a tier stopped running rather
 # than silently passing on stale committed numbers
-rm -f BENCH_serve.json
+rm -f BENCH_serve.json tuned_shapes.json
 
-echo "== serving throughput smoke (dense) =="
-timeout 300 python benchmarks/serve_bench.py --smoke
+# Each smoke tier is "description|serve_bench args".  run_smoke checks
+# that the tier actually refreshed BENCH_serve.json (ns-resolution mtime
+# before/after): a smoke that exits 0 without writing its row would
+# otherwise surface only as a confusing MISSING failure at the
+# check_bench step — or worse, pass on a row a previous tier wrote.
+run_smoke() {
+  local desc=$1; shift
+  echo "== serving smoke (${desc}) =="
+  local before="absent"
+  [[ -f BENCH_serve.json ]] && before=$(stat -c %y BENCH_serve.json)
+  timeout 300 python benchmarks/serve_bench.py "$@"
+  local after="absent"
+  [[ -f BENCH_serve.json ]] && after=$(stat -c %y BENCH_serve.json)
+  if [[ "$after" == "absent" || "$after" == "$before" ]]; then
+    echo "ERROR: smoke '${desc}' left BENCH_serve.json stale" \
+         "(exit 0 but no row written)" >&2
+    exit 1
+  fi
+}
 
-echo "== serving throughput smoke (paged KV cache) =="
-timeout 300 python benchmarks/serve_bench.py --paged --smoke
-
-echo "== serving smoke (paged + shared-prefix radix cache) =="
-# repeated-system-prompt workload; the smoke asserts a nonzero prefix
-# hit rate and that prefill tokens were actually skipped
-timeout 300 python benchmarks/serve_bench.py --paged --prefix-cache --smoke
-
-echo "== serving smoke (chunked prefill) =="
-# long-prompt workload; the smoke asserts chunk continuations actually
-# ran (PREFILLING slots resumed across join rounds)
-timeout 300 python benchmarks/serve_bench.py --paged --prefill-chunk 16 --smoke
-
-echo "== serving smoke (self-speculative decoding) =="
-# repetitive-continuation workload; the smoke asserts the n-gram drafter
-# got drafts accepted (acceptance_rate > 0) at bit-identical output
-timeout 300 python benchmarks/serve_bench.py --paged --speculate 3 --smoke
-
-echo "== serving smoke (optimistic admission + forced preemption) =="
-# tiny pool + chaos-forced exhaustion (free list raided at round 2,
-# returned at round 5); the smoke asserts at least one slot was actually
-# preempted and every preempted request completed via recompute-on-resume.
-# --trace-out records the run's request-lifecycle trace: the chaos run is
-# the richest one (preempt/resume, chaos instants), so it is the one CI
-# archives as trace_smoke.json and gates below; --attr-out decomposes the
-# same trace into per-request TTFT/TPOT bottleneck components
-# (attribution_report.json rides along as an artifact)
-timeout 300 python benchmarks/serve_bench.py --paged --optimistic --smoke \
-  --trace-out trace_smoke.json --attr-out attribution_report.json
+SMOKES=(
+  # dense baseline engine
+  "dense|--smoke"
+  # paged KV-cache block pool
+  "paged KV cache|--paged --smoke"
+  # repeated-system-prompt workload; asserts nonzero prefix hit rate
+  # and that prefill tokens were actually skipped
+  "paged + shared-prefix radix cache|--paged --prefix-cache --smoke"
+  # long-prompt workload; asserts chunk continuations actually ran
+  # (PREFILLING slots resumed across join rounds)
+  "chunked prefill|--paged --prefill-chunk 16 --smoke"
+  # repetitive-continuation workload; asserts the n-gram drafter got
+  # drafts accepted (acceptance_rate > 0) at bit-identical output
+  "self-speculative decoding|--paged --speculate 3 --smoke"
+  # tiny pool + chaos-forced exhaustion; asserts at least one slot was
+  # preempted and every preempted request completed via
+  # recompute-on-resume.  --trace-out records the richest lifecycle
+  # trace (preempt/resume, chaos instants) as trace_smoke.json for the
+  # gate below; --attr-out decomposes it into per-request TTFT/TPOT
+  # bottleneck components (attribution_report.json rides as an artifact)
+  "optimistic admission + forced preemption|--paged --optimistic --smoke \
+--trace-out trace_smoke.json --attr-out attribution_report.json"
+  # bounded kernel-autotune sweep (<=4 measured candidates per op,
+  # 2 reps, one geometry): winners land as autotune-* rows and persist
+  # to tuned_shapes.json, gated + uploaded as the tuning-tier artifact
+  "kernel autotune tier|--autotune-compare --smoke \
+--tuned-out tuned_shapes.json"
+)
+for entry in "${SMOKES[@]}"; do
+  # shellcheck disable=SC2086  # args are a flat flag list, split wanted
+  run_smoke "${entry%%|*}" ${entry#*|}
+done
 
 echo "== flight-recorder drill (forced PageError -> debug bundle) =="
 # crash-only machinery rots unless something crashes: force a real
@@ -85,6 +107,8 @@ echo "== bench trajectory vs committed baseline =="
 # fails on throughput collapse / lost hit rate / dead drafter / broken
 # reclamation, and doubles as the one-line-per-row bench delta summary;
 # the table is also written to bench_delta.txt for the CI artifact.
-# --trace additionally gates the chaos smoke's Perfetto trace: loadable,
-# non-empty, every submitted request retired
-python scripts/check_bench.py --out bench_delta.txt --trace trace_smoke.json
+# --trace additionally gates the chaos smoke's Perfetto trace (loadable,
+# non-empty, every submitted request retired); --tuned gates the
+# tune-smoke's cache (schema 1, >=1 entry per op, sane configs)
+python scripts/check_bench.py --out bench_delta.txt \
+  --trace trace_smoke.json --tuned tuned_shapes.json

@@ -57,11 +57,47 @@ class DecodeAttnPolicy:
     interpret: bool | None = None   # None -> auto (CPU interprets)
     block_size: int = BS
     kv_cap: int | None = None       # static bound on live KV depth
+    use_tuned: bool = True          # consult the autotuned-shape cache
+    tuned_path: str | None = None   # None -> committed default (env wins)
+
+    def __post_init__(self):
+        # resolve the tuned-shape table once, at policy construction —
+        # ops then do a dict lookup per call shape, never file I/O.
+        # A missing/corrupt cache (or REPRO_TUNED_SHAPES=off) degrades
+        # to the hand-picked defaults; it must never break routing.
+        entries: dict = {}
+        if self.use_tuned:
+            try:
+                from ..paged_attn.autotune import load_entries
+                entries = load_entries(self.tuned_path)
+            except Exception:
+                entries = {}
+        object.__setattr__(self, "_tuned", entries)
 
     def resolve_interpret(self) -> bool:
         if self.interpret is not None:
             return self.interpret
         return jax.default_backend() != "tpu"
+
+    def tuned_config(self, op: str, *, hq: int, hkv: int, d: int,
+                     page_size: int, lg: int | None = None) -> dict | None:
+        """The tuned launch config for ``(backend, op, geometry)``, or
+        None on a cache miss.  ``block_rows`` is sanitized against the
+        caller's fused row count ``lg`` (entries are keyed without Lq,
+        so a tuned row tiling is dropped when it does not divide this
+        call's rows); a malformed entry degrades field-by-field."""
+        ent = self._tuned.get(f"{jax.default_backend()}|{op}|"
+                              f"hq{hq}.hkv{hkv}.d{d}.ps{page_size}")
+        if not isinstance(ent, dict):
+            return None
+        cfg = dict(ent.get("config") or {})
+        if cfg.get("grid_order") not in ("bh", "hb"):
+            cfg.pop("grid_order", None)
+        br = cfg.get("block_rows")
+        if br is not None and (not isinstance(br, int) or br <= 0
+                               or lg is None or lg % br):
+            cfg.pop("block_rows", None)
+        return cfg or None
 
     def kernel_wanted(self) -> bool:
         if self.mode == "kernel":

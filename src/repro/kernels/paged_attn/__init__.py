@@ -1,3 +1,10 @@
+# the autotune *submodule* stays addressable (autotune.autotune(...) runs
+# a sweep); its data types are re-exported flat
+from . import autotune  # noqa: F401
+from .autotune import (Candidate, Geometry,  # noqa: F401
+                       enumerate_candidates, entry_key, load_entries,
+                       make_workload, prune, resolve_cache_path,
+                       save_entries)
 from .ops import (PagedAttnTelemetry, amenability_reports,  # noqa: F401
                   attn_telemetry,
                   paged_attn, paged_attn_xla,

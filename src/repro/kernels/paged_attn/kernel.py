@@ -23,6 +23,16 @@ Command skipping (§5.1.2) lands at page granularity and at two levels:
 
 The page dimension sits where decode_attn's KV-block dimension sat, so
 block shapes keep D on the 128-lane axis and the page rows on sublanes.
+
+Tunable launch geometry (see :mod:`autotune`): ``grid_order`` picks which
+of the two outer grid axes is major — ``"bh"`` walks slots outermost
+(each slot's heads, then pages, consecutively), ``"hb"`` walks KV heads
+outermost (all slots' page walks for one head before the next head —
+better pool-page locality when slots share prefix pages).  The page axis
+always stays innermost: the flash accumulator scratch is carried across
+grid steps and must see a slot-head's full page walk contiguously.
+Either order visits the same pages with the same per-(slot, head)
+accumulation sequence, so outputs are bit-identical.
 """
 from __future__ import annotations
 
@@ -34,11 +44,21 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+GRID_ORDERS = ("bh", "hb")     # batch-major / head-major outer walk
 
-def _make_kernel(ps: int, scale: float):
+
+def _axes(grid_order: str) -> tuple[int, int]:
+    """(batch_axis, head_axis) grid positions for ``grid_order``."""
+    if grid_order not in GRID_ORDERS:
+        raise ValueError(f"grid_order must be one of {GRID_ORDERS}, "
+                         f"got {grid_order!r}")
+    return (0, 1) if grid_order == "bh" else (1, 0)
+
+
+def _make_kernel(ps: int, scale: float, b_axis: int):
     def kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
                m_ref, l_ref, acc_ref):
-        bi = pl.program_id(0)
+        bi = pl.program_id(b_axis)
         p = pl.program_id(2)
         np_ = pl.num_programs(2)
         ln = len_ref[bi]
@@ -87,37 +107,46 @@ def _make_kernel(ps: int, scale: float):
 def paged_attn_kernel(q: jnp.ndarray, k_pages: jnp.ndarray,
                       v_pages: jnp.ndarray, table: jnp.ndarray,
                       lengths: jnp.ndarray, *,
-                      interpret: bool = True) -> jnp.ndarray:
+                      interpret: bool = True,
+                      grid_order: str = "bh") -> jnp.ndarray:
     """q: [B, Hkv, G, D]; k_pages/v_pages: [N, ps, Hkv, D] pooled pages;
     table: [B, P] int32 physical page per (slot, logical page) — every
-    entry must be < N (callers clamp sentinels); lengths: [B] int32."""
+    entry must be < N (callers clamp sentinels); lengths: [B] int32.
+    ``grid_order`` picks the outer grid majorness (see module docstring);
+    the page axis is always innermost."""
     b, hkv, g, d = q.shape
     n, ps = k_pages.shape[0], k_pages.shape[1]
     p_max = table.shape[1]
-    grid = (b, hkv, p_max)
+    b_axis, h_axis = _axes(grid_order)
+    grid = [0, 0, p_max]
+    grid[b_axis], grid[h_axis] = b, hkv
+    grid = tuple(grid)
 
-    def kv_map(bi, h, p, tbl, ln):
+    def kv_map(i0, i1, p, tbl, ln):
+        bi, h = (i0, i1)[b_axis], (i0, i1)[h_axis]
         # dead pages re-fetch the slot's first page (always resident for a
         # live slot) instead of pulling a fresh line that will be skipped
         pg = jnp.where(p * ps < ln[bi], tbl[bi, p], tbl[bi, 0])
         return (pg, 0, h, 0)
 
+    def q_map(i0, i1, p, tbl, ln):
+        bi, h = (i0, i1)[b_axis], (i0, i1)[h_axis]
+        return (bi, h, 0, 0)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1, g, d),
-                         lambda bi, h, p, tbl, ln: (bi, h, 0, 0)),
+            pl.BlockSpec((1, 1, g, d), q_map),
             pl.BlockSpec((1, ps, 1, d), kv_map),
             pl.BlockSpec((1, ps, 1, d), kv_map),
         ],
-        out_specs=pl.BlockSpec((1, 1, g, d),
-                               lambda bi, h, p, tbl, ln: (bi, h, 0, 0)),
+        out_specs=pl.BlockSpec((1, 1, g, d), q_map),
         scratch_shapes=[pltpu.VMEM((g, 1), jnp.float32),
                         pltpu.VMEM((g, 1), jnp.float32),
                         pltpu.VMEM((g, d), jnp.float32)],
     )
     return pl.pallas_call(
-        _make_kernel(ps, 1.0 / math.sqrt(d)), grid_spec=grid_spec,
+        _make_kernel(ps, 1.0 / math.sqrt(d), b_axis), grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
         interpret=interpret)(table, lengths, q, k_pages, v_pages)

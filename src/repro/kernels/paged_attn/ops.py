@@ -270,11 +270,22 @@ def _clamp_table(table: jnp.ndarray, n_pages: int) -> jnp.ndarray:
     return jnp.minimum(table.astype(jnp.int32), n_pages - 1)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+def _tuned_launch(op: str, q, k_pages, *, lg: int) -> dict:
+    """The active policy's tuned launch config for this call shape
+    (``{}`` on a miss / tuned loading disabled).  Shapes are static even
+    under trace, so resolution works at trace time."""
+    from ..decode_attn import active_policy
+    return active_policy().tuned_config(
+        op, hq=int(q.shape[-2]), hkv=int(k_pages.shape[2]),
+        d=int(q.shape[-1]), page_size=int(k_pages.shape[1]), lg=lg) or {}
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "grid_order"))
 def _paged_attn_jit(q: jnp.ndarray, k_pages: jnp.ndarray,
                     v_pages: jnp.ndarray, table: jnp.ndarray,
                     lengths: jnp.ndarray, *,
-                    interpret: bool = True) -> jnp.ndarray:
+                    interpret: bool = True,
+                    grid_order: str = "bh") -> jnp.ndarray:
     b, hq, d = q.shape
     hkv = k_pages.shape[2]
     g = hq // hkv
@@ -282,23 +293,31 @@ def _paged_attn_jit(q: jnp.ndarray, k_pages: jnp.ndarray,
     tbl = _clamp_table(table, k_pages.shape[0])
     ln = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32).reshape(-1), (b,))
     out = paged_attn_kernel(qg, k_pages, v_pages, tbl, ln,
-                            interpret=interpret)
+                            interpret=interpret, grid_order=grid_order)
     return out.reshape(b, hq, d)
 
 
 def paged_attn(q: jnp.ndarray, k_pages: jnp.ndarray, v_pages: jnp.ndarray,
                table: jnp.ndarray, lengths: jnp.ndarray, *,
-               interpret: bool = True) -> jnp.ndarray:
+               interpret: bool = True,
+               grid_order: str | None = None) -> jnp.ndarray:
     """q: [B, Hq, D] one-token queries; k_pages/v_pages: [N, ps, Hkv, D]
     pooled pages; table: [B, P] int32; slot b attends over the first
-    ``lengths[b]`` tokens of its pages in table order."""
+    ``lengths[b]`` tokens of its pages in table order.  ``grid_order``
+    None resolves through the active policy's tuned-shape cache
+    (:mod:`autotune`), falling back to the ``"bh"`` default."""
+    if grid_order is None:
+        grid_order = _tuned_launch(
+            "decode", q, k_pages,
+            lg=int(q.shape[-2]) // int(k_pages.shape[2])
+        ).get("grid_order", "bh")
     if not _TELEMETRY.enabled:
         return _paged_attn_jit(q, k_pages, v_pages, table, lengths,
-                               interpret=interpret)
+                               interpret=interpret, grid_order=grid_order)
     return _recorded("decode", "kernel", q, _paged_attn_jit,
                      q, k_pages, v_pages, table, lengths,
                      traffic=_traffic(q, k_pages, table, lengths),
-                     interpret=interpret)
+                     interpret=interpret, grid_order=grid_order)
 
 
 def paged_attn_xla(q: jnp.ndarray, k_pages: jnp.ndarray,
@@ -323,13 +342,17 @@ def _paged_attn_xla_impl(q, k_pages, v_pages, table, lengths):
 def paged_prefill_attn_pallas(q: jnp.ndarray, k_pages: jnp.ndarray,
                               v_pages: jnp.ndarray, table: jnp.ndarray,
                               q_offset: jnp.ndarray, kv_len: jnp.ndarray, *,
-                              interpret: bool = True) -> jnp.ndarray:
+                              interpret: bool = True,
+                              block_rows: int | None = None,
+                              grid_order: str = "bh") -> jnp.ndarray:
     """The Pallas flash-prefill path (see :mod:`prefill_kernel`): q
     [B, L, Hq, D] causal suffix queries at per-slot depths ``q_offset``
     [B], over pooled pages masked to ``kv_len``.  Queries are folded to
     [B, Hkv, L * G, D] so the kernel's block rows fuse (token, group) and
     D stays on the lane axis; K/V are cast to the query dtype (the pool
-    may hold a narrower storage dtype)."""
+    may hold a narrower storage dtype).  ``block_rows`` / ``grid_order``
+    pass straight to the kernel's launch geometry — tuned-shape
+    resolution happens in :func:`paged_prefill_attn`, not here."""
     b, lq, hq, d = q.shape
     hkv = k_pages.shape[2]
     g = hq // hkv
@@ -341,7 +364,9 @@ def paged_prefill_attn_pallas(q: jnp.ndarray, k_pages: jnp.ndarray,
     ln = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1), (b,))
     out = paged_prefill_attn_kernel(qf, k_pages.astype(q.dtype),
                                     v_pages.astype(q.dtype), tbl, off, ln,
-                                    g=g, interpret=interpret)
+                                    g=g, interpret=interpret,
+                                    block_rows=block_rows,
+                                    grid_order=grid_order)
     return out.reshape(b, hkv, lq, g, d).transpose(0, 2, 1, 3, 4) \
               .reshape(b, lq, hq, d)
 
@@ -350,6 +375,8 @@ def paged_prefill_attn(q: jnp.ndarray, k_pages: jnp.ndarray,
                        v_pages: jnp.ndarray, table: jnp.ndarray,
                        q_offset: jnp.ndarray,
                        kv_len: jnp.ndarray, *,
+                       grid_order: str | None = None,
+                       block_rows: int | None = None,
                        _op: str | None = None) -> jnp.ndarray:
     """Prefill-attention through the page table: multi-token causal GQA
     queries ``q`` [B, L, Hq, D] at per-slot depths ``q_offset`` [B] over
@@ -368,23 +395,38 @@ def paged_prefill_attn(q: jnp.ndarray, k_pages: jnp.ndarray,
     dead pages at both ends of the causal window; elsewhere the XLA
     gather-then-attend reference keeps the interpreter out of the serving
     hot loop.  MLA callers (no per-head pages to walk) stay on the ref.
+
+    ``grid_order`` / ``block_rows`` left None resolve through the active
+    policy's tuned-shape cache for this call's (backend, op, geometry)
+    key — defaults when no entry matches; explicit values always win
+    (the autotuner drives the sweep through them).  The XLA route has no
+    launch geometry, so both knobs are ignored there.
     """
     from ..decode_attn import active_policy
     pol = active_policy()
+    op = _op or ("decode" if q.shape[1] == 1 else "prefill")
     if pol.kernel_wanted():
+        if grid_order is None or block_rows is None:
+            g = int(q.shape[2]) // int(k_pages.shape[2])
+            cfg = _tuned_launch(op, q, k_pages, lg=int(q.shape[1]) * g)
+            if grid_order is None:
+                grid_order = cfg.get("grid_order", "bh")
+            if block_rows is None:
+                block_rows = cfg.get("block_rows")
         if _TELEMETRY.enabled:
-            op = _op or ("decode" if q.shape[1] == 1 else "prefill")
             return _recorded(op, "kernel", q, paged_prefill_attn_pallas,
                              q, k_pages, v_pages, table, q_offset, kv_len,
                              traffic=_traffic(q, k_pages, table, kv_len,
                                               q_offset=q_offset),
-                             interpret=pol.resolve_interpret())
+                             interpret=pol.resolve_interpret(),
+                             block_rows=block_rows, grid_order=grid_order)
         return paged_prefill_attn_pallas(q, k_pages, v_pages, table,
                                          q_offset, kv_len,
-                                         interpret=pol.resolve_interpret())
+                                         interpret=pol.resolve_interpret(),
+                                         block_rows=block_rows,
+                                         grid_order=grid_order)
     from .ref import paged_prefill_attn_ref
     if _TELEMETRY.enabled:
-        op = _op or ("decode" if q.shape[1] == 1 else "prefill")
         return _recorded(op, "xla", q, paged_prefill_attn_ref,
                          q, k_pages, v_pages, table, q_offset, kv_len,
                          traffic=_traffic(q, k_pages, table, kv_len,
@@ -396,7 +438,9 @@ def paged_prefill_attn(q: jnp.ndarray, k_pages: jnp.ndarray,
 def paged_verify_attn(q: jnp.ndarray, k_pages: jnp.ndarray,
                       v_pages: jnp.ndarray, table: jnp.ndarray,
                       q_offset: jnp.ndarray,
-                      kv_len: jnp.ndarray) -> jnp.ndarray:
+                      kv_len: jnp.ndarray, *,
+                      grid_order: str | None = None,
+                      block_rows: int | None = None) -> jnp.ndarray:
     """Speculative-decode **verify** attention: score a slot's current
     token plus its k drafts (``q`` [B, k+1, Hq, D]) in one call at the
     slot's decode depth ``q_offset = lengths``.
@@ -423,4 +467,5 @@ def paged_verify_attn(q: jnp.ndarray, k_pages: jnp.ndarray,
       any draft that fits the reserved window.
     """
     return paged_prefill_attn(q, k_pages, v_pages, table, q_offset, kv_len,
+                              grid_order=grid_order, block_rows=block_rows,
                               _op="verify")

@@ -13,7 +13,7 @@ walk, fatter matmuls.
 
 Layout mirrors the decode kernel.  The page table, per-slot query offsets
 and per-slot live lengths are scalar-prefetched, so the BlockSpec index
-map for grid step ``(b, h, p)`` redirects the K/V DMA to physical page
+map for grid step ``(b, h, r, p)`` redirects the K/V DMA to physical page
 ``table[b, p]`` — the gather costs nothing extra.  Queries are pre-folded
 to ``[B, Hkv, Lq * G, D]`` (row ``r`` is query token ``r // G``, group
 member ``r % G``) so the block keeps D on the 128-lane axis and the fused
@@ -27,12 +27,33 @@ Command skipping (§5.1.2) at page granularity, same two levels as decode:
   dead page's DMA is redirected to the slot's first page, so no fresh HBM
   line is touched;
 * causality adds a third skip decode does not have: a page strictly above
-  *every* query row of the block (``page_base > q_offset + Lq - 1``) is
-  dead too — with chunked prefill most of the table is either below the
+  *every* query row of the block (``page_base > q_offset + top_row // G``)
+  is dead too — with chunked prefill most of the table is either below the
   chunk (prefix: mask-free full compute) or above it (skipped), so the
   per-chunk work stays O(depth), not O(table width);
 * the caller prunes the grid by slicing the table to the page-count
   bucket, exactly like the decode path.
+
+Tunable launch geometry (see :mod:`autotune`):
+
+* ``block_rows`` tiles the fused ``Lq * G`` sublane axis: instead of one
+  block of every query row, the grid grows a row-block axis of
+  ``Lq * G // block_rows`` steps, each staging a ``[block_rows, D]``
+  query block and its own flash accumulator across the page walk.
+  Smaller row blocks shrink the VMEM working set and let the causal
+  top-skip fire per row block (a deep row block never pays for pages
+  only the shallow rows need), at the cost of re-walking the pages once
+  per block.  ``block_rows`` must divide ``Lq * G``; per query row the
+  accumulation sequence over pages is unchanged, so outputs are
+  numerically equivalent — but not guaranteed bit-identical on every
+  backend, because XLA may lower the block matmuls differently by
+  shape (CPU interpret does, by ulps).  The autotuner parity-gates
+  candidates against the default shape and discards non-exact ones, so
+  *tuned* configs are always bit-exact on the backend that tuned them.
+* ``grid_order`` picks the outer-axis majorness exactly as in the decode
+  kernel (``"bh"`` slot-major, ``"hb"`` head-major).  The row-block and
+  page axes always stay innermost, pages last — the accumulator scratch
+  must see one (slot, head, row-block)'s full page walk contiguously.
 
 The fully-masked-row hazard of flash attention (a row whose max stays
 ``-inf`` would normalize garbage) cannot arise here: page 0 holds key
@@ -50,16 +71,19 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .kernel import GRID_ORDERS, _axes
 
-def _make_kernel(ps: int, g: int, scale: float):
+
+def _make_kernel(ps: int, g: int, scale: float, b_axis: int):
     def kernel(tbl_ref, off_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
                m_ref, l_ref, acc_ref):
-        bi = pl.program_id(0)
-        p = pl.program_id(2)
-        np_ = pl.num_programs(2)
+        bi = pl.program_id(b_axis)
+        r = pl.program_id(2)
+        p = pl.program_id(3)
+        np_ = pl.num_programs(3)
         off = off_ref[bi]
         ln = len_ref[bi]
-        lg = m_ref.shape[0]               # Lq * G fused rows
+        br = m_ref.shape[0]               # rows of this block (<= Lq * G)
 
         @pl.when(p == 0)
         def _():
@@ -68,26 +92,29 @@ def _make_kernel(ps: int, g: int, scale: float):
             acc_ref[...] = jnp.zeros_like(acc_ref)
 
         base = p * ps
-        # row r is query token r // g at absolute position off + r // g
-        rows = jax.lax.broadcasted_iota(jnp.int32, (lg, 1), 0)
-        qpos = off + rows // g                                # [lg, 1]
+        # fused row r*br + j is query token (r*br + j) // g at absolute
+        # position off + that token index
+        row0 = r * br
+        rows = row0 + jax.lax.broadcasted_iota(jnp.int32, (br, 1), 0)
+        qpos = off + rows // g                                # [br, 1]
         kpos = base + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
 
         # page-granular command skipping, both ends of the causal window:
         # pages past the slot's live depth AND pages strictly above every
-        # query row of this block do no compute (their DMA was redirected
-        # to the slot's first page, so no new HBM line was pulled either)
-        @pl.when((base < ln) & (base <= off + (lg - 1) // g))
+        # query row of this row block do no compute (their DMA was
+        # redirected to the slot's first page, so no new HBM line was
+        # pulled either)
+        @pl.when((base < ln) & (base <= off + (row0 + br - 1) // g))
         def _():
-            q = q_ref[0, 0]                  # [lg, D]
+            q = q_ref[0, 0]                  # [br, D]
             k = k_ref[0, :, 0, :]            # [ps, D]
             v = v_ref[0, :, 0, :]
             scores = jax.lax.dot_general(
                 q, k, (((1,), (1,)), ((), ())),
-                preferred_element_type=jnp.float32) * scale   # [lg, ps]
-            live = (kpos <= qpos) & (kpos < ln)               # [lg, ps]
+                preferred_element_type=jnp.float32) * scale   # [br, ps]
+            live = (kpos <= qpos) & (kpos < ln)               # [br, ps]
             scores = jnp.where(live, scores, -1e30)
-            m_prev = m_ref[...]              # [lg, 1]
+            m_prev = m_ref[...]              # [br, 1]
             m_new = jnp.maximum(m_prev, scores.max(axis=-1, keepdims=True))
             pexp = jnp.exp(scores - m_new)
             corr = jnp.exp(m_prev - m_new)
@@ -106,46 +133,63 @@ def _make_kernel(ps: int, g: int, scale: float):
     return kernel
 
 
-@functools.partial(jax.jit, static_argnames=("g", "interpret"))
+@functools.partial(jax.jit, static_argnames=("g", "interpret",
+                                             "block_rows", "grid_order"))
 def paged_prefill_attn_kernel(q: jnp.ndarray, k_pages: jnp.ndarray,
                               v_pages: jnp.ndarray, table: jnp.ndarray,
                               q_offset: jnp.ndarray, kv_len: jnp.ndarray,
-                              *, g: int, interpret: bool = True
-                              ) -> jnp.ndarray:
+                              *, g: int, interpret: bool = True,
+                              block_rows: int | None = None,
+                              grid_order: str = "bh") -> jnp.ndarray:
     """q: [B, Hkv, Lq * G, D] fused query rows (row ``r`` = token ``r // g``
     of group member ``r % g``); k_pages/v_pages: [N, ps, Hkv, D] pooled
     pages; table: [B, P] int32, every entry < N (callers clamp sentinels);
     q_offset/kv_len: [B] int32 per-slot depth of the query block and total
-    live KV length (``q_offset + Lq`` for a suffix prefill)."""
+    live KV length (``q_offset + Lq`` for a suffix prefill).
+    ``block_rows`` (must divide ``Lq * G``; default: all rows in one
+    block) and ``grid_order`` tune the launch geometry — outputs are
+    numerically equivalent across valid settings; bit-exactness per
+    backend is verified by the autotuner (see module docstring)."""
     b, hkv, lg, d = q.shape
     ps = k_pages.shape[1]
     p_max = table.shape[1]
-    grid = (b, hkv, p_max)
+    br = lg if block_rows is None else int(block_rows)
+    if br <= 0 or lg % br:
+        raise ValueError(f"block_rows={block_rows} must divide the fused "
+                         f"query-row count Lq*G={lg}")
+    b_axis, h_axis = _axes(grid_order)
+    grid = [0, 0, lg // br, p_max]
+    grid[b_axis], grid[h_axis] = b, hkv
+    grid = tuple(grid)
 
-    def kv_map(bi, h, p, tbl, off, ln):
-        # dead pages (past the live depth, or above the whole query block)
+    def kv_map(i0, i1, r, p, tbl, off, ln):
+        bi, h = (i0, i1)[b_axis], (i0, i1)[h_axis]
+        # dead pages (past the live depth, or above the whole row block)
         # re-fetch the slot's first page instead of pulling a fresh line
         base = p * ps
-        dead = (base >= ln[bi]) | (base > off[bi] + (lg - 1) // g)
+        dead = (base >= ln[bi]) | (base > off[bi] + (r * br + br - 1) // g)
         pg = jnp.where(dead, tbl[bi, 0], tbl[bi, p])
         return (pg, 0, h, 0)
+
+    def q_map(i0, i1, r, p, tbl, off, ln):
+        bi, h = (i0, i1)[b_axis], (i0, i1)[h_axis]
+        return (bi, h, r, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1, lg, d),
-                         lambda bi, h, p, tbl, off, ln: (bi, h, 0, 0)),
+            pl.BlockSpec((1, 1, br, d), q_map),
             pl.BlockSpec((1, ps, 1, d), kv_map),
             pl.BlockSpec((1, ps, 1, d), kv_map),
         ],
-        out_specs=pl.BlockSpec((1, 1, lg, d),
-                               lambda bi, h, p, tbl, off, ln: (bi, h, 0, 0)),
-        scratch_shapes=[pltpu.VMEM((lg, 1), jnp.float32),
-                        pltpu.VMEM((lg, 1), jnp.float32),
-                        pltpu.VMEM((lg, d), jnp.float32)],
+        out_specs=pl.BlockSpec((1, 1, br, d), q_map),
+        scratch_shapes=[pltpu.VMEM((br, 1), jnp.float32),
+                        pltpu.VMEM((br, 1), jnp.float32),
+                        pltpu.VMEM((br, d), jnp.float32)],
     )
     return pl.pallas_call(
-        _make_kernel(ps, g, 1.0 / math.sqrt(d)), grid_spec=grid_spec,
+        _make_kernel(ps, g, 1.0 / math.sqrt(d), b_axis),
+        grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, hkv, lg, d), q.dtype),
         interpret=interpret)(table, q_offset, kv_len, q, k_pages, v_pages)

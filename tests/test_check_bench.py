@@ -75,3 +75,59 @@ def test_out_writes_delta_table(tmp_path):
     with open(out_path) as f:
         body = f.read()
     assert "smoke-paged" in body and "trajectory ok" in body
+
+
+AUTOTUNE_ROW = {"backend": "cpu", "winner": {"grid_order": "hb"},
+                "winner_wall_s": 0.0001, "default_wall_s": 0.0002,
+                "achieved_gbps": 0.1, "op_byte": 0.5}
+
+
+def test_autotune_row_gates(tmp_path):
+    """Baseline rows carrying winner_wall_s switch on the autotune
+    gates: winner no slower than the measured default, timing hooks
+    recorded real walltime, winner config present."""
+    base = _write(tmp_path, "base.json", {"autotune-decode": AUTOTUNE_ROW})
+    good = _write(tmp_path, "good.json",
+                  {"autotune-decode": dict(AUTOTUNE_ROW)})
+    assert check_bench.check(good, base) == 0
+    slow = _write(tmp_path, "slow.json",
+                  {"autotune-decode": dict(AUTOTUNE_ROW,
+                                           winner_wall_s=0.0003)})
+    assert check_bench.check(slow, base) == 1
+    dead = _write(tmp_path, "dead.json",
+                  {"autotune-decode": dict(AUTOTUNE_ROW,
+                                           achieved_gbps=0.0)})
+    assert check_bench.check(dead, base) == 1
+    noconf = _write(tmp_path, "noconf.json",
+                    {"autotune-decode": {k: v for k, v in
+                                         AUTOTUNE_ROW.items()
+                                         if k != "winner"}})
+    assert check_bench.check(noconf, base) == 1
+
+
+def _write_tuned(tmp_path, name, data):
+    path = str(tmp_path / name)
+    with open(path, "w") as f:
+        json.dump(data, f)
+    return path
+
+
+def test_tuned_cache_gate(tmp_path):
+    """The tune-smoke's cache artifact must be schema-1, non-empty, and
+    cover every op — an empty or partial sweep fails loudly."""
+    good = _write_tuned(tmp_path, "good.json", {"schema": 1, "entries": {
+        f"cpu|{op}|hq4.hkv1.d16.ps8": {"config": {"grid_order": "bh"}}
+        for op in ("decode", "prefill", "verify")}})
+    assert check_bench.check_tuned(good) == 0
+    empty = _write_tuned(tmp_path, "empty.json",
+                         {"schema": 1, "entries": {}})
+    assert check_bench.check_tuned(empty) > 0
+    partial = _write_tuned(tmp_path, "partial.json", {
+        "schema": 1, "entries": {"cpu|decode|x": {
+            "config": {"grid_order": "bh"}}}})
+    assert check_bench.check_tuned(partial) > 0
+    badcfg = _write_tuned(tmp_path, "badcfg.json", {"schema": 1, "entries": {
+        f"cpu|{op}|x": {"config": {"grid_order": "diagonal"}}
+        for op in ("decode", "prefill", "verify")}})
+    assert check_bench.check_tuned(badcfg) > 0
+    assert check_bench.check_tuned(str(tmp_path / "missing.json")) == 1
