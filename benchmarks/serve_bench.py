@@ -42,10 +42,21 @@ reservation vs optimistic at the same undersized pool and asserts the
 optimistic engine holds strictly more live slots at strictly higher KV
 utilization with bit-identical greedy tokens.
 
+``--overload`` serves with the degradation controller on while the chaos
+injector exhausts the pool and injects a deadline-stamped low-priority
+queue burst: the smoke gates ``cancellations > 0``, ``shed_requests >
+0``, recovery to HEALTHY and zero orphaned pages; the full mode's
+``overload_compare`` (also standalone via ``--overload-compare``) runs a
+deadline-carrying 3x-capacity burst controller-on vs controller-off and
+asserts the controller wins on deadline attainment at bit-identical
+completed tokens.
+
 Every row now also reports the request-latency trajectory (TTFT p50/p95
 and time-per-output-token p50/p95, measured at host sync points), the
 queue-wait p50/p95, the speculative ``acceptance_rate`` (0 with
-speculation off) and the preemption counters (0 in reservation mode).
+speculation off), the preemption counters (0 in reservation mode) and
+the overload counters (cancellations, sheds, deadline attainment,
+degradation time-in-state — all zero/HEALTHY with the controller off).
 
 ``--smoke`` is the CI sanity mode (~5 s): engine only, asserts a nonzero
 throughput (with ``--paged``: the paged engine, plus 100% page
@@ -118,7 +129,8 @@ def write_bench_json(rows: dict, path: str = BENCH_JSON) -> None:
 def full_bench_rows(r: dict, capacity: dict, prefix: dict,
                     chunked: dict | None = None,
                     spec: dict | None = None,
-                    preempt: dict | None = None) -> dict:
+                    preempt: dict | None = None,
+                    overload: dict | None = None) -> dict:
     """The full-mode trajectory rows, assembled once for both entry
     points (CLI main and the benchmarks.run table hook)."""
     rows = {
@@ -139,6 +151,9 @@ def full_bench_rows(r: dict, capacity: dict, prefix: dict,
     if preempt is not None:
         rows["full-preempt-optimistic"] = preempt["optimistic"]
         rows["full-preempt-reserve"] = preempt["reserve"]
+    if overload is not None:
+        rows["full-overload-on"] = overload["controller-on"]
+        rows["full-overload-off"] = overload["controller-off"]
     return rows
 
 
@@ -244,6 +259,7 @@ def bench(arch: str = "qwen2-0.5b", *, batch: int = 4, requests: int = 12,
           admission_mode: str = "reserve", chaos=None,
           trace_out: str | None = None, attr_out: str | None = None,
           ttft_slo: float | None = None, tpot_slo: float | None = None,
+          overload: bool = False, overload_opts: dict | None = None,
           seed: int = 0) -> dict:
     cfg = get_config(arch).reduced()
     model = Model(cfg)
@@ -253,7 +269,8 @@ def bench(arch: str = "qwen2-0.5b", *, batch: int = 4, requests: int = 12,
                        total_pages=total_pages, prefix_cache=prefix_cache,
                        prefill_chunk=prefill_chunk, speculate_k=speculate_k,
                        admission_mode=admission_mode,
-                       ttft_slo_s=ttft_slo, tpot_slo_s=tpot_slo)
+                       ttft_slo_s=ttft_slo, tpot_slo_s=tpot_slo,
+                       overload=overload, **(overload_opts or {}))
     if prefix_cache and not shared_prefix:
         shared_prefix = 2 * page_size      # two full shareable pages
     if speculate_k:
@@ -319,6 +336,23 @@ def bench(arch: str = "qwen2-0.5b", *, batch: int = 4, requests: int = 12,
            "tpot_p50_s": lat["tpot_p50_s"], "tpot_p95_s": lat["tpot_p95_s"],
            "slo_enabled": slo["enabled"],
            "slo_attainment": slo["slo_attainment"]}
+    # overload-protection trajectory: cancellation/shed tallies, deadline
+    # attainment, watchdog trips and the degradation ladder's time-in-
+    # state — all-zero/HEALTHY when the controller is off, so every row
+    # is comparable across modes
+    ostats = batcher.overload_stats()
+    tis = ostats["controller"]["time_in_state"]
+    out.update({
+        "cancellations": ostats["cancellations"],
+        "shed_requests": ostats["shed_requests"],
+        "deadline_attainment": ostats["deadline_attainment"],
+        "watchdog_trips": ostats["watchdog_trips"],
+        "recovered_to_healthy":
+            bool(ostats["controller"]["recovered_to_healthy"]),
+        "overload_state": ostats["controller"]["state"],
+        "time_healthy_s": tis["HEALTHY"],
+        "time_degraded_s": tis["DEGRADED"],
+        "time_shedding_s": tis["SHEDDING"]})
     if tracer is not None:
         # bottleneck attribution over the measured drain's trace: the
         # wave-level dominant components ride on the row; the full
@@ -596,6 +630,119 @@ def preempt_compare(arch: str = "qwen2-0.5b", *, requests: int = 9,
     return res
 
 
+def overload_compare(arch: str = "qwen2-0.5b", *, wave: int = 4,
+                     burst_factor: int = 3, max_new: int = 12,
+                     max_len: int = 96, page_size: int = 8,
+                     pool_pages: int = 12, batch: int = 4,
+                     sync_every: int = 4, seed: int = 3) -> dict:
+    """Degradation controller on vs off under a deadline-carrying
+    ``burst_factor``x-capacity queue burst at the same undersized pool.
+
+    Calibration avoids wall-clock flakiness: an unloaded reference
+    batcher (ample pool, no deadlines) first drains the wave alone in
+    the steady state, and every measured request's deadline is 2x that
+    unloaded drain — reachable for the protected wave, unreachable for
+    a burst serialized behind ``burst_factor``x the capacity.  The
+    controller-off engine admits everything optimistically and thrashes:
+    burst requests are deadline-cancelled (scored misses) once expiry or
+    the remaining-budget projection catches them.  The controller-on
+    engine trips SHEDDING on pool pressure and answers the burst with
+    retryable RETRY_AFTER rejections — *excluded* from attainment (a
+    fast rejection is not a latency violation) — so the wave's deadlines
+    survive.  Gates: controller-on beats controller-off on deadline
+    attainment, both sides drain with zero orphaned pages
+    (``KVPool.check`` + full partition accounting), and every request
+    that *completes* is bit-identical to the unloaded reference run
+    (degradation changes when and whether work runs, never its
+    tokens)."""
+    cfg = get_config(arch).reduced()
+    model = Model(cfg)
+    params = pm.unwrap(model.init(jax.random.key(seed)))
+    rng = np.random.default_rng(seed)
+    n = wave * (1 + burst_factor)
+    # >= page_size-token prompts: admission maps 2+ pages per slot, so a
+    # full slot table alone puts the pool well past degrade_pressure
+    reqs = [(rid, rng.integers(0, cfg.vocab,
+                               size=int(rng.integers(page_size + 2,
+                                                     2 * page_size))
+                               ).tolist()) for rid in range(n)]
+    wave_reqs, burst_reqs = reqs[:wave], reqs[wave:]
+    wave2 = 10 ** 6          # rid offset of each batcher's warmup wave
+
+    # unloaded reference: ample pool, no deadlines — the parity oracle
+    # (greedy tokens are schedule-independent) and the deadline
+    # calibration, both measured on a *warm* batcher (a fresh one would
+    # time jit compilation, not serving)
+    ref_cfg = ServeConfig(max_len=max_len, batch=batch,
+                          sync_every=sync_every, paged=True,
+                          page_size=page_size)
+    rb = Batcher(model, params, ref_cfg)
+    for rid, p in reqs:
+        rb.submit(rid + wave2, p)
+    rb.run(max_new=max_new)                    # warmup: compiles
+    rb.reset_stats()
+    for rid, p in wave_reqs:
+        rb.submit(rid, p)
+    t0 = time.perf_counter()
+    rb.run(max_new=max_new)
+    t_wave = time.perf_counter() - t0          # unloaded wave drain
+    for rid, p in burst_reqs:
+        rb.submit(rid, p)
+    ref_all = dict(rb.run(max_new=max_new))    # parity oracle, all rids
+    deadline = 2.0 * t_wave
+
+    base = dict(max_len=max_len, batch=batch, sync_every=sync_every,
+                paged=True, page_size=page_size, total_pages=pool_pages,
+                admission_mode="optimistic")
+    res = {}
+    for name, on in (("controller-off", False), ("controller-on", True)):
+        scfg = ServeConfig(**base, overload=on,
+                           overload_degrade_pressure=0.5,
+                           overload_shed_pressure=0.65,
+                           overload_up_rounds=1, overload_down_rounds=2)
+        b = Batcher(model, params, scfg)
+        for rid, p in reqs:                    # warmup at full load: the
+            b.submit(rid + wave2, p)           # timed run replays warm
+        b.run(max_new=max_new)                 # shapes, no compiles
+        b.reset_stats()
+        for rid, p in wave_reqs:
+            b.submit(rid, p, priority=0, deadline_s=deadline)
+        for rid, p in burst_reqs:
+            b.submit(rid, p, priority=-1, deadline_s=deadline)
+        t0 = time.perf_counter()
+        got = {rid: out for rid, out in b.run(max_new=max_new).items()
+               if rid < wave2}
+        dt = time.perf_counter() - t0
+        b.pool.check()                         # no orphans, exact refcounts
+        assert (b.pool.free_pages + b.pool.cached_pages
+                + b.pool.preempted_pages == b.pool.n_pages), \
+            f"{name}: pages unaccounted for after drain"
+        # every request that completed did so bit-identically to the
+        # unloaded reference — overload protection never changes tokens
+        bad = [rid for rid, out in got.items() if out != ref_all[rid]]
+        assert not bad, f"{name}: tokens diverged for rids {bad}"
+        o = b.overload_stats()
+        res[name] = {"tok_s": sum(len(v) for v in got.values()) / dt,
+                     "s": dt, "completed": len(got),
+                     "deadline_attainment": o["deadline_attainment"],
+                     "deadline_met": o["deadline_met"],
+                     "deadline_total": o["deadline_total"],
+                     "cancellations": o["cancellations"],
+                     "shed_requests": o["shed_requests"],
+                     "rejections": len(o["rejections"]),
+                     "preemptions": b.preemptions,
+                     "controller_state": o["controller"]["state"],
+                     **_lat_row(b)}
+    off, on_ = res["controller-off"], res["controller-on"]
+    assert on_["deadline_attainment"] > off["deadline_attainment"], \
+        (f"degradation controller did not improve deadline attainment: "
+         f"on {on_['deadline_attainment']:.2f} vs "
+         f"off {off['deadline_attainment']:.2f}")
+    assert on_["shed_requests"] > 0, \
+        "controller-on burst produced no RETRY_AFTER sheds"
+    return res
+
+
 def prefill_kernel_timing(arch: str = "qwen2-0.5b", *, b: int = 4,
                           lq: int = 32, pages: int = 64,
                           page_size: int = 16, reps: int = 3) -> dict:
@@ -796,13 +943,21 @@ def run(table) -> None:
               f"{prs['peak_live_slots']} live slots, KV util "
               f"{po['kv_util_mean']:.0%} vs {prs['kv_util_mean']:.0%} "
               f"({po['preemptions']} preemptions)")
+    ov = overload_compare()
+    oon, ooff = ov["controller-on"], ov["controller-off"]
+    table.add("serve overload protection (3x burst + deadlines)",
+              oon["s"] * 1e9,
+              f"attainment {oon['deadline_attainment']:.0%} vs "
+              f"{ooff['deadline_attainment']:.0%} uncontrolled "
+              f"({oon['shed_requests']} shed, "
+              f"{oon['cancellations']} cancelled)")
     for key, row in sorted(roofline_probe().items()):
         table.add(f"paged-attn roofline {key}", row["wall_s"] * 1e9,
                   f"{row['achieved_gbps']:.3f} GB/s achieved, "
                   f"op/byte {row['op_byte']:.2f}, "
                   f"{row['bytes'] / 1e6:.2f} MB moved")
     tel.disable()
-    write_bench_json(full_bench_rows(r, c, p, ch, sc, pr))
+    write_bench_json(full_bench_rows(r, c, p, ch, sc, pr, ov))
 
 
 def main() -> None:
@@ -840,6 +995,20 @@ def main() -> None:
                          "smoke forces pool exhaustion via the chaos "
                          "injector and gates preemptions > 0 + bit-safe "
                          "recompute, the full mode runs preempt_compare")
+    ap.add_argument("--overload", action="store_true",
+                    help="overload protection (needs --paged): serve "
+                         "with the degradation controller on while the "
+                         "chaos injector exhausts the pool and injects a "
+                         "deadline-stamped low-priority queue burst; the "
+                         "smoke gates cancellations > 0, shed > 0, "
+                         "recovery to HEALTHY and zero orphaned pages")
+    ap.add_argument("--overload-compare", action="store_true",
+                    help="standalone controller-on vs controller-off "
+                         "comparison under a deadline-carrying 3x-"
+                         "capacity burst (the overload_compare gate: "
+                         "controller-on must win on deadline attainment "
+                         "at bit-identical completed tokens).  Runs "
+                         "instead of the serve bench")
     ap.add_argument("--smoke", action="store_true",
                     help="CI sanity: engine only, tiny sizes, ~5s")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
@@ -892,6 +1061,20 @@ def main() -> None:
         if args.tuned_out:
             print(f"[autotune] winners persisted to {args.tuned_out}")
         return
+    if args.overload_compare:
+        res = overload_compare(args.arch)
+        write_bench_json({"full-overload-on": res["controller-on"],
+                          "full-overload-off": res["controller-off"]})
+        for name in ("controller-off", "controller-on"):
+            row = res[name]
+            print(f"[overload_compare] {name}: attainment "
+                  f"{row['deadline_attainment']:.0%} "
+                  f"({row['deadline_met']}/{row['deadline_total']}), "
+                  f"{row['completed']} completed, "
+                  f"{row['shed_requests']} shed, "
+                  f"{row['cancellations']} cancelled, "
+                  f"{row['preemptions']} preemptions")
+        return
     if args.attr_out and not args.trace_out:
         ap.error("--attr-out requires --trace-out (attribution walks "
                  "the recorded trace)")
@@ -899,6 +1082,8 @@ def main() -> None:
         ap.error("--prefix-cache requires --paged")
     if args.optimistic and not args.paged:
         ap.error("--optimistic requires --paged")
+    if args.overload and not args.paged:
+        ap.error("--overload requires --paged")
     if args.speculate is not None:
         if not args.paged:
             ap.error("--speculate requires --paged")
@@ -919,7 +1104,29 @@ def main() -> None:
             # the smoke shrinks the page size; re-align the chunk to it
             chunk = max(smoke_ps, chunk - chunk % smoke_ps)
         chaos = None
-        if args.optimistic:
+        overload_opts = None
+        if args.overload:
+            # the overload drill: the injector drains the free list at
+            # round 1 (pool pressure 1.0 before anything admits) and
+            # injects a deadline-stamped low-priority 8-request burst at
+            # the same round, so the controller — with single-round
+            # hysteresis at smoke sizes — climbs to SHEDDING by round 2
+            # and sheds the burst with RETRY_AFTER *before* the
+            # projection sweep could deadline-cancel it (round 1 has no
+            # latency samples yet, so projections abstain).  Pages come
+            # back at round 5, pressure collapses, and the ladder must
+            # walk back to HEALTHY — the recovery the smoke gates on.
+            chaos = ChaosInjector(exhaust_at={1: 0}, release_at=(5,),
+                                  burst_at={1: 8}, burst_deadline_s=5.0,
+                                  check_invariants=True)
+            overload_opts = dict(overload_degrade_pressure=0.5,
+                                 overload_shed_pressure=0.8,
+                                 overload_up_rounds=1,
+                                 overload_down_rounds=1,
+                                 # keep the 4-request wave: only the
+                                 # synthetic burst is sheddable
+                                 overload_queue_keep=4)
+        elif args.optimistic:
             # forced pool exhaustion right after the first admissions
             # (mid-growth, while slots still need pages): the injector
             # raids the free list at round 2 and hands it back at round
@@ -933,22 +1140,26 @@ def main() -> None:
                   # preemption needs enough decode rounds for growth
                   # demand to hit the chaos-starved pool
                   max_new=12 if args.speculate else
-                          10 if args.optimistic else 4,
+                          10 if args.optimistic or args.overload else 4,
                   # chunked prompts carry a 2*chunk shared prefix — scale
                   # the window so any valid chunk size fits; speculative
                   # requests need prompt + max_new + k to fit
                   max_len=2 * chunk + 32 if chunk else
-                          48 if args.speculate or args.optimistic else 32,
+                          48 if (args.speculate or args.optimistic
+                                 or args.overload) else 32,
                   sync_every=4, smoke=True, paged=args.paged,
                   page_size=smoke_ps, prefix_cache=args.prefix_cache,
                   prefill_chunk=chunk, speculate_k=args.speculate,
                   # tight pool so slot growth actually contends while
                   # the chaos injector holds pages back
-                  total_pages=10 if args.optimistic else None,
-                  admission_mode=("optimistic" if args.optimistic
+                  total_pages=(10 if args.optimistic or args.overload
+                               else None),
+                  admission_mode=("optimistic"
+                                  if args.optimistic or args.overload
                                   else "reserve"),
                   chaos=chaos, trace_out=args.trace_out,
                   attr_out=args.attr_out,
+                  overload=args.overload, overload_opts=overload_opts,
                   # generous default SLOs keep smoke attainment at a
                   # deterministic 1.0 across runners while still
                   # exercising the whole monitor path
@@ -979,7 +1190,15 @@ def main() -> None:
             assert r["acceptance_rate"] > 0, \
                 "speculative smoke accepted no drafts on the " \
                 "repetitive-continuation workload"
-        mode = ("preempt" if args.optimistic
+        if args.overload:
+            assert r["cancellations"] > 0, \
+                "overload smoke cancelled nothing"
+            assert r["shed_requests"] > 0, \
+                "SHEDDING never shed the chaos burst"
+            assert r["recovered_to_healthy"], \
+                "controller never walked back to HEALTHY after the burst"
+        mode = ("overload" if args.overload
+                else "preempt" if args.optimistic
                 else "spec" if args.speculate
                 else "chunked" if chunk
                 else "paged+prefix" if args.prefix_cache
@@ -999,15 +1218,27 @@ def main() -> None:
             "ttft_p50_s": r["ttft_p50_s"], "ttft_p95_s": r["ttft_p95_s"],
             "tpot_p50_s": r["tpot_p50_s"], "tpot_p95_s": r["tpot_p95_s"],
             "slo_attainment": r["slo_attainment"],
+            "cancellations": r["cancellations"],
+            "shed_requests": r["shed_requests"],
+            "deadline_attainment": r["deadline_attainment"],
+            "watchdog_trips": r["watchdog_trips"],
+            "recovered_to_healthy": r["recovered_to_healthy"],
+            "time_healthy_s": r["time_healthy_s"],
+            "time_degraded_s": r["time_degraded_s"],
+            "time_shedding_s": r["time_shedding_s"],
             "pages_reclaimed": bool(r.get("pages_reclaimed", False))}})
         dom = (f", dominant TTFT {r['dominant_ttft_component']}"
                if "dominant_ttft_component" in r else "")
+        ovl = (f", shed {r['shed_requests']}, cancelled "
+               f"{r['cancellations']}, deadline attainment "
+               f"{r['deadline_attainment']:.0%}, recovered="
+               f"{r['recovered_to_healthy']}" if args.overload else "")
         print(f"[serve_bench --smoke] {mode}: {r['tokens']} tokens, "
               f"{r['engine_tok_s']:.1f} tok/s, "
               f"KV util {r['kv_util_mean']:.0%}, "
               f"prefix hit rate {r['prefix_hit_rate']:.0%}, "
               f"acceptance {r['acceptance_rate']:.0%}, "
-              f"preemptions {r['preemptions']}, "
+              f"preemptions {r['preemptions']}{ovl}, "
               f"SLO attainment {r['slo_attainment']:.0%}{dom} "
               f"on {jax.default_backend()}")
         return
@@ -1115,13 +1346,24 @@ def main() -> None:
           f"({po['preemptions']} preemptions, "
           f"{po['recompute_tokens']} tokens recomputed)")
 
+    ov = overload_compare(args.arch)
+    oon, ooff = ov["controller-on"], ov["controller-off"]
+    print(f"[overload @ 3x burst + deadlines] off: attainment "
+          f"{ooff['deadline_attainment']:.0%} "
+          f"({ooff['deadline_met']}/{ooff['deadline_total']}, "
+          f"{ooff['cancellations']} cancelled)")
+    print(f"                                   on: attainment "
+          f"{oon['deadline_attainment']:.0%} "
+          f"({oon['deadline_met']}/{oon['deadline_total']}, "
+          f"{oon['shed_requests']} shed with RETRY_AFTER)")
+
     kt = prefill_kernel_timing(args.arch)
     print(f"[prefill kernel]  pallas(interpret={kt['backend'] != 'tpu'}): "
           f"{kt['kernel_interpret_s'] * 1e3:.1f}ms / call, xla ref: "
           f"{kt['xla_ref_s'] * 1e3:.1f}ms / call on {kt['backend']}")
     roofline_probe(args.arch)
     print_roofline()
-    write_bench_json(full_bench_rows(r, c, pc, ch, sc, pr))
+    write_bench_json(full_bench_rows(r, c, pc, ch, sc, pr, ov))
 
 
 if __name__ == "__main__":

@@ -38,6 +38,16 @@ a silently-skipped bench tier would otherwise pass on the intersection):
   carry a numeric attainment in [0, 1] (the SLO monitor is still
   observing; the smokes run generous SLOs so the value itself is a
   deterministic 1.0).
+* ``cancellations`` / ``shed_requests``: nonzero wherever the baseline
+  has them nonzero (the overload smoke still actually cancels and
+  sheds — an overload controller that never fires would pass every
+  other gate while protecting nothing).
+* ``recovered_to_healthy``: must stay truthy wherever the baseline pins
+  it (the degradation ladder descends again once the burst drains; a
+  controller stuck in SHEDDING is a one-way ratchet, not protection).
+* ``deadline_attainment``: wherever the baseline pins one, the fresh
+  row must carry a numeric attainment in [0, 1] (deadline accounting is
+  still wired through retire *and* cancel).
 * ``kv_util_mean``: in (0, 1.5] — paged sharing can push utilization
   above 1.0, but not past every-slot-shares-everything sanity.
 * autotune rows (baseline has ``winner_wall_s``): the fresh sweep must
@@ -129,7 +139,8 @@ def check(bench_path: str = BENCH, baseline_path: str = BASELINE,
                     f"tok_s {_fmt(f_tok)} < {tol:.2f} x baseline "
                     f"{_fmt(b_tok)}")
         for key in ("prefix_hit_rate", "prefill_skipped", "chunk_joins",
-                    "acceptance_rate", "preemptions"):
+                    "acceptance_rate", "preemptions", "cancellations",
+                    "shed_requests"):
             if brow.get(key) and not frow.get(key):
                 row_fail.append(f"{key} dropped to zero "
                                 f"(baseline {_fmt(brow[key])})")
@@ -138,6 +149,19 @@ def check(bench_path: str = BENCH, baseline_path: str = BASELINE,
         if brow.get("recomputed_ok") and not frow.get("recomputed_ok"):
             row_fail.append("recomputed_ok is no longer true "
                             "(a preempted request lost tokens)")
+        if brow.get("recovered_to_healthy") \
+                and not frow.get("recovered_to_healthy"):
+            row_fail.append("recovered_to_healthy is no longer true "
+                            "(degradation controller stuck degraded)")
+        if "deadline_attainment" in brow:
+            # wherever the baseline pins a deadline attainment, the fresh
+            # row must carry a sane one — missing means the deadline
+            # accounting silently stopped
+            da = frow.get("deadline_attainment")
+            if not isinstance(da, (int, float)) or isinstance(da, bool) \
+                    or not 0.0 <= da <= 1.0:
+                row_fail.append(f"deadline_attainment {_fmt(da)} missing "
+                                "or outside [0, 1]")
         if "slo_attainment" in brow:
             # wherever the baseline pins an attainment, the fresh row
             # must carry a sane one — a missing value means the SLO
@@ -238,14 +262,18 @@ def check_trace(trace_path: str) -> int:
             rid = (e.get("args") or {}).get("rid")
             if e.get("name") == "SUBMIT" and rid is not None:
                 submitted.add(rid)
-            elif e.get("name") == "RETIRE" and rid is not None:
+            elif e.get("name") in ("RETIRE", "CANCEL") and rid is not None:
+                # CANCEL is terminal like RETIRE: a deadline-cancelled or
+                # shed request left the system deliberately, it did not
+                # vanish mid-lifecycle
                 retired.add(rid)
     if evs and not submitted:
         failures.append("trace has no SUBMIT events (tracer not wired "
                         "into the smoke run?)")
     lost = submitted - retired
     if lost:
-        failures.append(f"submitted rids never retired: {sorted(lost)}")
+        failures.append("submitted rids never retired or cancelled: "
+                        f"{sorted(lost)}")
     if failures:
         print(f"[check_bench] trace gate {trace_path}: "
               f"{len(failures)} failure(s):")

@@ -53,7 +53,31 @@ run_smoke() {
   echo "== serving smoke (${desc}) =="
   local before="absent"
   [[ -f BENCH_serve.json ]] && before=$(stat -c %y BENCH_serve.json)
-  timeout 300 python benchmarks/serve_bench.py "$@"
+  local rc=0
+  timeout 300 python benchmarks/serve_bench.py "$@" || rc=$?
+  if [[ $rc -eq 124 ]]; then
+    # name the hung tier and show the last row that *did* land, so the
+    # CI log says "overload smoke hung; the last completed tier was X"
+    # instead of a bare timeout with no context
+    echo "ERROR: smoke '${desc}' timed out after 300s" >&2
+    python - <<'EOF' >&2 || true
+import json
+try:
+    rows = json.load(open("BENCH_serve.json")).get("rows", {})
+except Exception:
+    rows = {}
+if rows:
+    name = list(rows)[-1]
+    print(f"last completed bench row ({name}): "
+          f"{json.dumps(rows[name], default=str)}")
+else:
+    print("no bench rows were written before the timeout")
+EOF
+    exit 1
+  elif [[ $rc -ne 0 ]]; then
+    echo "ERROR: smoke '${desc}' failed (exit ${rc})" >&2
+    exit "$rc"
+  fi
   local after="absent"
   [[ -f BENCH_serve.json ]] && after=$(stat -c %y BENCH_serve.json)
   if [[ "$after" == "absent" || "$after" == "$before" ]]; then
@@ -85,6 +109,11 @@ SMOKES=(
   # bottleneck components (attribution_report.json rides as an artifact)
   "optimistic admission + forced preemption|--paged --optimistic --smoke \
 --trace-out trace_smoke.json --attr-out attribution_report.json"
+  # chaos burst into a tight pool with the degradation controller on;
+  # asserts requests were actually cancelled and shed (check_bench gates
+  # cancellations/shed_requests nonzero + recovered_to_healthy + a sane
+  # deadline_attainment on the smoke-overload row)
+  "overload protection|--paged --overload --smoke"
   # bounded kernel-autotune sweep (<=4 measured candidates per op,
   # 2 reps, one geometry): winners land as autotune-* rows and persist
   # to tuned_shapes.json, gated + uploaded as the tuning-tier artifact

@@ -32,7 +32,11 @@ def run(arch: str, *, reduced: bool = True, requests: int = 4,
         speculate_ngram: int = 2, optimistic: bool = False,
         trace_out: str | None = None,
         ttft_slo: float | None = None,
-        tpot_slo: float | None = None) -> dict:
+        tpot_slo: float | None = None,
+        overload: bool = False,
+        deadline_s: float | None = None,
+        timeout_s: float | None = None,
+        watchdog_rounds: int = 100_000) -> dict:
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -49,14 +53,16 @@ def run(arch: str, *, reduced: bool = True, requests: int = 4,
                        admission_mode="optimistic" if optimistic
                        else "reserve",
                        telemetry=bool(trace_out),
-                       ttft_slo_s=ttft_slo, tpot_slo_s=tpot_slo)
+                       ttft_slo_s=ttft_slo, tpot_slo_s=tpot_slo,
+                       overload=overload,
+                       watchdog_rounds=watchdog_rounds)
     b = Batcher(model, params, scfg, eos_id=eos_id, seed=seed)
     rng = np.random.default_rng(seed)
     system = rng.integers(0, cfg.vocab, size=shared_prefix).tolist()
     for rid in range(requests):
         prompt = system + rng.integers(0, cfg.vocab,
                                        size=int(rng.integers(4, 12))).tolist()
-        b.submit(rid, prompt)
+        b.submit(rid, prompt, deadline_s=deadline_s, timeout_s=timeout_s)
     t0 = time.perf_counter()
     results = b.run(max_new=max_new)
     dt = time.perf_counter() - t0
@@ -99,6 +105,18 @@ def run(arch: str, *, reduced: bool = True, requests: int = 4,
               f"ttft {slo['burn_rate_ttft']:.2f} / "
               f"tpot {slo['burn_rate_tpot']:.2f} over the last "
               f"{slo['window']} samples)")
+    ostats = b.overload_stats()
+    if overload or deadline_s is not None or timeout_s is not None \
+            or ostats["cancellations"]:
+        ctl = ostats["controller"]
+        by = ", ".join(f"{r}={n}" for r, n
+                       in ostats["cancelled_by_reason"].items() if n)
+        print(f"[serve] overload: {ostats['cancellations']} cancelled "
+              f"({by or 'none'}), {ostats['shed_requests']} shed, "
+              f"deadline attainment {ostats['deadline_attainment']:.0%} "
+              f"({ostats['deadline_met']}/{ostats['deadline_total']}), "
+              f"controller {ctl['state']}, "
+              f"watchdog trips {ostats['watchdog_trips']}")
     attribution = None
     if trace_out:
         from ..serve.attribution import attribution_report
@@ -115,7 +133,8 @@ def run(arch: str, *, reduced: bool = True, requests: int = 4,
               "ui.perfetto.dev)")
     return {"results": results, "tok_per_s": toks / dt, "kv_util": util,
             "prefix": pstats, "spec": sstats, "latency": lat,
-            "preempt": kstats, "slo": slo, "attribution": attribution}
+            "preempt": kstats, "slo": slo, "overload": ostats,
+            "attribution": attribution}
 
 
 def main() -> None:
@@ -189,6 +208,25 @@ def main() -> None:
     ap.add_argument("--tpot-slo", type=float, default=None, metavar="S",
                     help="per-output-token SLO in seconds (see "
                          "--ttft-slo)")
+    ap.add_argument("--overload", action="store_true",
+                    help="enable the SLO-burn/pool-pressure degradation "
+                         "controller (HEALTHY -> DEGRADED -> SHEDDING "
+                         "with hysteresis): sheds speculation, shrinks "
+                         "prefill chunks, freezes optimistic growth, and "
+                         "sheds lowest-priority queued work under "
+                         "sustained overload")
+    ap.add_argument("--deadline-s", type=float, default=None, metavar="S",
+                    help="stamp every request with this completion "
+                         "deadline; expired or provably-unreachable "
+                         "requests are cancelled and their pages "
+                         "reclaimed")
+    ap.add_argument("--timeout-s", type=float, default=None, metavar="S",
+                    help="hard per-request wall-clock timeout (cancelled "
+                         "with reason 'timeout' when exceeded)")
+    ap.add_argument("--watchdog-rounds", type=int, default=100_000,
+                    help="progress watchdog: rounds without any forward "
+                         "progress before the scheduler dumps a flight "
+                         "bundle and force-sheds the blocking request")
     args = ap.parse_args()
     run(args.arch, reduced=args.reduced, requests=args.requests,
         max_new=args.max_new, batch=args.batch, max_len=args.max_len,
@@ -200,7 +238,9 @@ def main() -> None:
         prefill_round_tokens=args.prefill_round_tokens,
         speculate_k=args.speculate, speculate_ngram=args.speculate_ngram,
         optimistic=args.optimistic, trace_out=args.trace_out,
-        ttft_slo=args.ttft_slo, tpot_slo=args.tpot_slo)
+        ttft_slo=args.ttft_slo, tpot_slo=args.tpot_slo,
+        overload=args.overload, deadline_s=args.deadline_s,
+        timeout_s=args.timeout_s, watchdog_rounds=args.watchdog_rounds)
 
 
 if __name__ == "__main__":

@@ -69,14 +69,19 @@ def _overlap(a0: float, a1: float, b0: float, b1: float) -> float:
 
 def _admitted_intervals(tl: list[dict], t_end: float) -> list[tuple]:
     """[(t0, t1)] intervals during which the request held a slot, from
-    its event state machine: ADMIT opens, PREEMPT/RETIRE closes (an
-    interval still open at ``t_end`` is clipped there)."""
+    its event state machine: ADMIT opens, PREEMPT/RETIRE/CANCEL closes
+    (an interval still open at ``t_end`` is clipped there).  CANCEL is
+    terminal like RETIRE — a mid-flight cancellation ends the admitted
+    interval at the instant its pages were released, so a cancelled
+    request's TTFT decomposition partitions exactly like a retired
+    one's."""
     out: list[tuple[float, float]] = []
     open_t: float | None = None
     for e in tl:
         if e["kind"] == "ADMIT" and open_t is None:
             open_t = e["t"]
-        elif e["kind"] in ("PREEMPT", "RETIRE") and open_t is not None:
+        elif (e["kind"] in ("PREEMPT", "RETIRE", "CANCEL")
+                and open_t is not None):
             out.append((open_t, e["t"]))
             open_t = None
     if open_t is not None:
@@ -120,6 +125,9 @@ class RequestAttribution:
     preemptions: int
     ttft: dict
     tpot: dict
+    # terminal cancellation (None = retired normally): the reason code
+    # from the CANCEL event, so a report can split "slow" from "shed"
+    cancelled: str | None = None
 
     @property
     def decode_s(self) -> float:
@@ -208,10 +216,13 @@ def explain(tracer: Tracer, rid: int) -> RequestAttribution | None:
                 "requeue_s": (d1 - d0) - adm_s,
                 "host_sync_s": adm_s - seg_s - rec_s}
 
+    cancel = next((e for e in reversed(tl) if e["kind"] == "CANCEL"), None)
     return RequestAttribution(
         rid=rid, ttft_s=ttft_s, tpot_s=tpot_s, tokens=tokens,
         preemptions=sum(1 for e in tl if e["kind"] == "PREEMPT"),
-        ttft=ttft, tpot=tpot)
+        ttft=ttft, tpot=tpot,
+        cancelled=(cancel.get("reason", "client")
+                   if cancel is not None else None))
 
 
 def attribution_report(tracer: Tracer) -> dict:
@@ -244,6 +255,7 @@ def attribution_report(tracer: Tracer) -> dict:
         report["per_request"].append({
             "rid": a.rid, "ttft_s": a.ttft_s, "tpot_s": a.tpot_s,
             "tokens": a.tokens, "preemptions": a.preemptions,
+            "cancelled": a.cancelled,
             "dominant_ttft": a.dominant_ttft(),
             "ttft": dict(a.ttft), "tpot": dict(a.tpot)})
     return report

@@ -19,6 +19,15 @@ expected to *survive*, not crash on:
   declared lost at a configured round; the scheduler treats it exactly
   like a preemption (release pages, re-queue, recompute-on-resume), so
   recovery is the same code path the chaos run is already exercising;
+* **forced stall** — suppress *all* scheduler work (no refill, no
+  decode, no commits) for K rounds from a configured round, so the
+  progress watchdog's trip path (flight-bundle dump + force-shed of the
+  blocking head) is exercised deterministically instead of waiting for
+  a real livelock;
+* **synthetic queue burst** — inject N low-priority requests into the
+  queue at a configured round (optionally deadline-stamped), so the
+  overload controller's pressure signal and shedding ladder see a
+  reproducible 3x-capacity spike mid-drain;
 * **per-round invariant checks** — ``KVPool.check()`` (and
   ``PrefixCache.check()`` when the cache is on) at every scheduling
   round, so an invariant violation surfaces at the round it happens
@@ -61,23 +70,48 @@ class ChaosInjector:
         ``callable(batcher, candidates) -> slot | None`` consulted before
         the scheduler's victim policy; returning ``None`` falls through
         to the policy.
+    stall_at:
+        ``{round: k_rounds}`` — from the given round, the scheduler
+        skips its entire round body (no refill, no decode segment, no
+        commits, no retirements) for ``k_rounds`` consecutive rounds.
+        A watchdog whose ``watchdog_rounds`` bound is below ``k_rounds``
+        must trip during the stall (the drill the watchdog tests and
+        ``scripts/ci.sh`` rely on).
+    burst_at:
+        ``{round: n_requests}`` — inject ``n_requests`` synthetic
+        low-priority (``burst_priority``) requests at the given round,
+        each a deterministic short prompt sized to pass the scheduler's
+        admission validation, stamped with ``burst_deadline_s`` when
+        set.  Synthetic rids start at ``BURST_RID0`` so they can never
+        collide with test workloads.
     check_invariants:
         run ``pool.check()`` / ``prefix.check()`` every round.
     """
+
+    BURST_RID0 = 10_000
 
     def __init__(self, *,
                  exhaust_at: Mapping[int, int] | None = None,
                  release_at: Iterable[int] = (),
                  fail_slot_at: Mapping[int, int | str] | None = None,
                  victim_override: Callable | None = None,
+                 stall_at: Mapping[int, int] | None = None,
+                 burst_at: Mapping[int, int] | None = None,
+                 burst_deadline_s: float | None = None,
+                 burst_priority: int = -1,
                  check_invariants: bool = False):
         self.exhaust_at = dict(exhaust_at or {})
         self.release_at = set(release_at)
         self.fail_slot_at = dict(fail_slot_at or {})
         self.victim_override = victim_override
+        self.stall_at = dict(stall_at or {})
+        self.burst_at = dict(burst_at or {})
+        self.burst_deadline_s = burst_deadline_s
+        self.burst_priority = burst_priority
         self.check_invariants = check_invariants
         self.events: list[tuple[int, str, int]] = []   # (round, kind, arg)
         self.slot_failures = 0
+        self._burst_seq = 0
 
     # ------------------------------------------------------------------
     def on_round(self, batcher) -> None:
@@ -114,6 +148,24 @@ class ChaosInjector:
                 batcher._preempt_slot(slot, reason="slot-failure")
                 self.slot_failures += 1
                 self.events.append((r, "fail_slot", slot))
+        if r in self.stall_at:
+            k = max(1, int(self.stall_at[r]))
+            # the scheduler checks ``round < _stall_until`` at the top of
+            # each round and skips the whole round body — K dead rounds
+            # with zero progress, exactly what the watchdog must catch
+            batcher._stall_until = max(batcher._stall_until, r + k)
+            self.events.append((r, "stall", k))
+            trace("CHAOS_STALL", rounds=k)
+        if r in self.burst_at:
+            n = int(self.burst_at[r])
+            for _ in range(n):
+                rid = self.BURST_RID0 + self._burst_seq
+                self._burst_seq += 1
+                batcher.submit(rid, self._burst_prompt(batcher, rid),
+                               priority=self.burst_priority,
+                               deadline_s=self.burst_deadline_s)
+            self.events.append((r, "burst", n))
+            trace("CHAOS_BURST", requests=n)
         if self.check_invariants:
             if pool is not None:
                 pool.check()
@@ -136,6 +188,22 @@ class ChaosInjector:
                 tr.event("CHAOS_VICTIM_OVERRIDE", None,
                          round=batcher.round, slot=v)
         return v
+
+    def _burst_prompt(self, batcher, rid: int) -> list[int]:
+        """Deterministic synthetic prompt sized so the mid-run submit can
+        never trip the scheduler's oversize validation (which only runs
+        at ``run()`` entry): token ids stay tiny (< any real vocab) and
+        the length fits ``max_len`` and the pool's per-slot page bound
+        alongside the run's ``max_new`` budget + speculation window."""
+        cfg = batcher.cfg
+        budget = getattr(batcher, "_max_new", 16) + batcher.spec_k
+        cap = cfg.max_len - budget
+        if batcher.pool is not None:
+            pool = batcher.pool
+            cap = min(cap, min(pool.n_pages, pool.max_pages)
+                      * pool.page_size - budget)
+        plen = max(1, min(cfg.page_size if cfg.paged else 8, cap))
+        return [1 + (rid * 7 + j) % 13 for j in range(plen)]
 
     @staticmethod
     def _resolve_slot(batcher, spec: int | str) -> int | None:

@@ -136,6 +136,33 @@ class ServeConfig:
     flight_recorder: bool = True
     flight_events: int = 256
     flight_path: str | None = None
+    # overload protection (repro.serve.overload): when True the batcher
+    # runs a DegradationController — a hysteresis ladder HEALTHY ->
+    # DEGRADED -> SHEDDING driven by the windowed SLO burn rate and the
+    # pool-pressure gauge.  DEGRADED sheds speculation and shrinks the
+    # prefill chunk; SHEDDING additionally freezes optimistic slot
+    # growth (admission reverts to worst-case reservation) and sheds
+    # lowest-priority queued work with a retryable RETRY_AFTER
+    # rejection.  Degradation changes when/whether work runs, never its
+    # tokens — completing requests stay bit-exact.  Deadline/timeout
+    # cancellation (submit(deadline_s=..., timeout_s=...)) is always on;
+    # the controller is the opt-in *load-shedding* half.
+    overload: bool = False
+    overload_degrade_burn: float = 1.0   # burn rate that enters DEGRADED
+    overload_shed_burn: float = 2.0      # burn rate that enters SHEDDING
+    overload_degrade_pressure: float = 0.9   # pool mapped+held fraction
+    overload_shed_pressure: float = 1.0      # ... with work still queued
+    overload_up_rounds: int = 2          # consecutive hot rounds to climb
+    overload_down_rounds: int = 4        # consecutive cool rounds to drop
+    # SHEDDING drains the queue down to this depth (None -> cfg.batch),
+    # lowest-priority / latest-submitted first, never a preempted resume
+    overload_queue_keep: int | None = None
+    overload_retry_after_s: float = 1.0  # RETRY_AFTER hint on shed
+    # progress watchdog (replaces the idle-spin guard): rounds without
+    # any join / commit / retirement / preemption / cancellation before
+    # the scheduler dumps the flight bundle and force-sheds the blocking
+    # head instead of raising
+    watchdog_rounds: int = 100_000
 
     @property
     def max_pages(self) -> int:

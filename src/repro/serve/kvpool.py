@@ -145,6 +145,16 @@ class KVPool:
     def cached_page_ids(self) -> list[int]:
         return sorted(self._cached)
 
+    def pressure(self) -> float:
+        """Fraction of the pool no admission could be granted from:
+        mapped (live slots' KV) plus chaos-held pages over the total.
+        Free, cached and preempted pages all count as *available* — the
+        evictor reclaims the latter two on demand — so 1.0 means every
+        grantable page is pinned under live work.  This is the pool
+        signal the overload DegradationController climbs its ladder on
+        (burn rate is the other)."""
+        return (self.used_pages + self.held_pages) / self.n_pages
+
     def is_cached(self, page: int) -> bool:
         return page in self._cached
 

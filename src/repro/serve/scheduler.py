@@ -162,10 +162,34 @@ runs to retirement, so every preempted request eventually completes.
 
 Chaos injection (``chaos=``, repro.serve.chaos): a deterministic
 round-keyed injector can force pool exhaustion (``KVPool.hold`` on the
-free list), override victim selection, and simulate slot failure
+free list), override victim selection, simulate slot failure
 mid-decode (handled as a preemption — recompute-on-resume *is* the
-recovery path), with optional per-round ``KVPool.check()`` /
-``PrefixCache.check()`` invariant sweeps.
+recovery path), suppress whole scheduling rounds (``stall_at``, the
+watchdog drill) and inject synthetic queue bursts (``burst_at``), with
+optional per-round ``KVPool.check()`` / ``PrefixCache.check()``
+invariant sweeps.
+
+Overload protection (repro.serve.overload): deadlines and cancellation
+are always on — ``submit(deadline_s=..., timeout_s=...)`` stamps
+per-request absolute deadlines, and a per-round sweep cancels requests
+whose deadline/timeout passed or whose remaining-budget projection
+(observed TTFT/TPOT means) can no longer meet the deadline.  CANCELLED
+is a terminal lifecycle state (QUEUED→CANCELLED releases nothing;
+PREFILLING/DECODING→CANCELLED releases pages through ``_release_slot``
+and done-latches the device row exactly like a preemption, minus the
+re-queue), traced as a ``CANCEL`` event with a reason code
+(deadline / timeout / shed / client).  ``cfg.overload`` arms the
+degradation controller (HEALTHY→DEGRADED→SHEDDING on SLO burn rate +
+pool pressure): DEGRADED sheds speculation and shrinks the prefill
+chunk, SHEDDING freezes optimistic growth (admission reverts to
+worst-case reservation) and sheds lowest-priority queued work with a
+retryable RETRY_AFTER rejection.  Degradation only changes when and
+whether work runs — every request that completes stays bit-exact.  A
+progress watchdog (``cfg.watchdog_rounds`` rounds with no join, commit,
+retirement, preemption or cancellation) replaces the old idle-spin
+guard: it dumps the flight-recorder bundle and force-sheds the blocking
+head instead of raising, so a livelocked drain finishes (minus the shed
+requests) and ships its own postmortem.
 """
 from __future__ import annotations
 
@@ -183,6 +207,9 @@ from .engine import (PAD_TOKEN, ServeConfig, jit_decode_loop, jit_join,
                      jit_paged_decode_loop, jit_paged_join,
                      jit_spec_decode_loop)
 from .kvpool import KVPool, PageError
+from .overload import (CANCEL_REASONS, HEALTHY, RETRY_AFTER, STATES,
+                       DegradationController, Watchdog, WatchdogStall,
+                       project_finish_s)
 from .prefixcache import PrefixCache
 # _pct moved to telemetry (the registry owns percentile math) but stays
 # importable from here — it has always been this module's public helper
@@ -372,6 +399,36 @@ class ContinuousBatcher:
         self._preempt_counts: dict[int, int] = {}
         self.preempted_rids: set[int] = set()
         self.preempt_events: list[tuple[int, int, int, str]] = []
+        # overload protection: per-request absolute deadline/timeout
+        # stamps, terminal cancellations (rid -> reason code), the
+        # RETRY_AFTER rejections shed queued work was answered with, the
+        # opt-in degradation controller and the always-on progress
+        # watchdog (which replaces the old 100k-idle-round guard)
+        self._deadline_t: dict[int, float] = {}
+        self._timeout_t: dict[int, float] = {}
+        self.cancelled: dict[int, str] = {}
+        self.rejections: list[dict] = []
+        if cfg.watchdog_rounds < 1:
+            raise ValueError("watchdog_rounds must be >= 1")
+        self.overload = (DegradationController(
+            degrade_burn=cfg.overload_degrade_burn,
+            shed_burn=cfg.overload_shed_burn,
+            degrade_pressure=cfg.overload_degrade_pressure,
+            shed_pressure=cfg.overload_shed_pressure,
+            up_rounds=cfg.overload_up_rounds,
+            down_rounds=cfg.overload_down_rounds)
+            if cfg.overload else None)
+        self.watchdog = Watchdog(cfg.watchdog_rounds)
+        # chaos ``stall_at``: rounds below this bound skip the whole
+        # round body (the deterministic livelock the watchdog drills on)
+        self._stall_until = 0
+        self._max_new = 0
+        # keep the host history mirror warm whenever speculation is
+        # *configured*, even while the controller has shed it — a
+        # re-enabled drafter must read a corpus that covers the tokens
+        # plain decode committed in between (wrong drafts only cost
+        # acceptance, but a warm mirror keeps them right)
+        self._hist_on = cfg.speculate_k is not None
         # scheduling-round counter: the chaos injector keys on it
         self.round = 0
 
@@ -488,24 +545,75 @@ class ContinuousBatcher:
             self.metrics.inc(f"slo.{metric}_met.c{cls}")
 
     # ------------------------------------------------------------------
-    def submit(self, rid: int, prompt: list[int],
-               priority: int = 0) -> None:
+    def submit(self, rid: int, prompt: list[int], priority: int = 0,
+               deadline_s: float | None = None,
+               timeout_s: float | None = None) -> None:
         """Queue a request.  ``priority`` is its SLO class for the
         preemption victim policy — higher values are evicted later
-        (ties fall back to most-pages / least-progress)."""
+        (ties fall back to most-pages / least-progress).
+
+        ``deadline_s`` is the client's completion deadline, seconds from
+        now: the per-round sweep cancels the request (reason
+        ``"deadline"``) once the deadline passes *or* once the
+        remaining-budget TTFT/TPOT projection says it can no longer be
+        met — pages come back immediately instead of at the doomed
+        completion.  ``timeout_s`` is a hard lifetime cap (reason
+        ``"timeout"``): no projection, only actual expiry.  Deadline
+        attainment (``latency_stats()['deadline_attainment']``) scores
+        deadline-carrying requests that completed or expired; shed /
+        client cancels are excluded (a RETRY_AFTER rejection is a fast
+        failure, not a latency violation)."""
         if not prompt:
             raise ValueError("empty prompt")
+        now = time.perf_counter()
+        if deadline_s is not None:
+            if deadline_s < 0:
+                raise ValueError("deadline_s must be >= 0")
+            self._deadline_t[rid] = now + deadline_s
+        if timeout_s is not None:
+            if timeout_s < 0:
+                raise ValueError("timeout_s must be >= 0")
+            self._timeout_t[rid] = now + timeout_s
         self.queue.append((rid, list(prompt)))
         self.req_priority[rid] = priority
-        self._submit_t[rid] = time.perf_counter()
+        self._submit_t[rid] = now
         self._trace("SUBMIT", rid, prompt_tokens=len(prompt),
-                    priority=priority)
+                    priority=priority, deadline_s=deadline_s,
+                    timeout_s=timeout_s)
 
     # ------------------------------------------------------------------
+    def _spec_live(self) -> int:
+        """The speculation window actually in force this round: the
+        configured ``spec_k`` unless the degradation controller has shed
+        speculation (DEGRADED+).  Shedding is loss-free for tokens —
+        speculative and plain greedy decode are bit-identical — it only
+        trades the steps-per-token win for smaller verify writes and
+        smaller on-demand page growth."""
+        if self.overload is not None and self.overload.shed_speculation:
+            return 0
+        return self.spec_k
+
+    def _effective_chunk(self) -> int | None:
+        """The prefill chunk in force this round: halved (page-aligned,
+        floored at one page) while the controller is DEGRADED+ — shorter
+        joins stall live slots' decode for less at the cost of more
+        continuation rounds.  Unchunked configs stay unchunked (the
+        controller never *introduces* a feature)."""
+        chunk = self.cfg.prefill_chunk
+        if (chunk is not None and self.overload is not None
+                and self.overload.shrink_chunk):
+            ps = self.cfg.page_size
+            return max(ps, (chunk // 2) // ps * ps)
+        return chunk
+
     def _loop(self, steps: int, cap: int | None):
-        keyid = (steps, cap)
+        # the spec flag keys the cache too: the controller can shed
+        # speculation mid-run, and the spec/plain loops take different
+        # carries — a (steps, cap) collision across modes would replay
+        # the wrong executable
+        keyid = (steps, cap, bool(self._spec_live()))
         if keyid not in self._loops:
-            if self.spec_k:
+            if self._spec_live():
                 self._loops[keyid] = jit_spec_decode_loop(
                     self.model, self.cfg, steps=steps, eos_id=self.eos)
             elif self.cfg.paged:
@@ -565,7 +673,14 @@ class ContinuousBatcher:
             self._note_admitted(rid)
             self._trace("ADMIT", rid, slot=slot, prompt_tokens=len(p))
             return rid, p, 0
-        optimistic = self.cfg.admission_mode == "optimistic"
+        # SHEDDING freezes optimistic slot growth at the source: new
+        # admissions revert to worst-case reservation, so they can never
+        # demand on-demand pages (and thus preemptions) later — already
+        # live optimistic slots still grow as needed (they must, or
+        # their verify writes would land outside their tables)
+        optimistic = (self.cfg.admission_mode == "optimistic"
+                      and not (self.overload is not None
+                               and self.overload.freeze_growth))
         window = 1
         if self.cfg.admission == "skip-ahead":
             window = min(len(self.queue), self.cfg.admission_lookahead)
@@ -617,7 +732,7 @@ class ContinuousBatcher:
                 # in the same round already match them; later chunks
                 # extend the registration as they cover more pages
                 # (unchunked: the first chunk is the whole prompt)
-                chunk = self.cfg.prefill_chunk
+                chunk = self._effective_chunk()
                 covered = (len(p) if chunk is None
                            else min(len(p), mtoks + chunk))
                 self._register_covered(slot, p, covered)
@@ -764,7 +879,7 @@ class ContinuousBatcher:
         left with it)."""
         if self.pool is None or self.cfg.admission_mode != "optimistic":
             return
-        adv = steps * (self.spec_k + 1)
+        adv = steps * (self._spec_live() + 1)
         order = sorted(
             (i for i, r in enumerate(self.slot_rid)
              if r is not None and not self.slot_pending[i]),
@@ -792,8 +907,240 @@ class ContinuousBatcher:
                 self.pool.extend(slot, need)
 
     # ------------------------------------------------------------------
+    # cancellation: the terminal CANCELLED lifecycle state
+    # (QUEUED→CANCELLED and PREFILLING/DECODING→CANCELLED)
+    # ------------------------------------------------------------------
+    def cancel(self, rid: int, reason: str = "client") -> bool:
+        """Cancel a queued or in-flight request.  Mid-flight
+        cancellation releases the slot's pages through the ordinary
+        ``_release_slot`` path (registered prefix pages park
+        evictable-cached — the KV is real and immutable, a later match
+        may still use it) and done-latches the device row like a
+        preemption, minus the re-queue.  Returns False when the rid is
+        not queued or live (already retired or cancelled)."""
+        if reason not in CANCEL_REASONS:
+            raise ValueError(f"unknown cancel reason {reason!r} "
+                             f"(expected one of {CANCEL_REASONS})")
+        for qi, (qrid, _) in enumerate(self.queue):
+            if qrid == rid:
+                del self.queue[qi]
+                self._finish_cancel(rid, None, reason)
+                return True
+        for slot, srid in enumerate(self.slot_rid):
+            if srid == rid:
+                self._cancel_slot(slot, reason)
+                return True
+        return False
+
+    def _cancel_slot(self, slot: int, reason: str) -> None:
+        rid = self.slot_rid[slot]
+        if rid is None:
+            raise RuntimeError(f"cancel of empty slot {slot}")
+        pages = (len(self.pool.slot_pages(slot))
+                 if self.pool is not None else 0)
+        if self.prefix is not None and not self.slot_pending[slot]:
+            # like a preemption: full pages of committed KV are real and
+            # immutable — register them so the cache keeps the benefit
+            # of the work the cancelled request already paid for
+            out = self.outputs.get(rid, [])
+            resume = (list(self.slot_prompt[slot])
+                      + out[self.slot_prior[slot]:])
+            self._register_covered(slot, resume[:-1] if out else resume,
+                                   self.slot_len[slot])
+        self._release_slot(slot)
+        self.slot_rid[slot] = None
+        self.slot_len[slot] = 0
+        self.slot_budget[slot] = 0
+        # freeze the abandoned device row (same contract as preemption):
+        # done-latched rows stop sampling and growing their cache, and
+        # the released table row is the OOB sentinel, so residual
+        # writes drop
+        self.done = self.done.at[slot].set(True)
+        self.remaining = self.remaining.at[slot].set(0)
+        self._finish_cancel(rid, slot, reason, pages_released=pages)
+
+    def _finish_cancel(self, rid: int, slot: int | None, reason: str,
+                       pages_released: int = 0) -> None:
+        """Terminal bookkeeping shared by queued and mid-flight
+        cancellation: reason ledger, counters, deadline-attainment
+        accounting, RETRY_AFTER rejection for sheds, CANCEL trace."""
+        self.cancelled[rid] = reason
+        self._resumed.discard(rid)
+        self._preempt_counts.pop(rid, None)
+        self._skips.pop(rid, None)
+        self._submit_t.pop(rid, None)
+        dl = self._deadline_t.pop(rid, None)
+        self._timeout_t.pop(rid, None)
+        self.metrics.inc("cancel.count")
+        self.metrics.inc(f"cancel.{reason}")
+        if dl is not None and reason in ("deadline", "timeout"):
+            # an expiry/projection cancel is a scored deadline miss;
+            # shed/client cancels leave attainment untouched (the
+            # request was answered, not served late)
+            self.metrics.inc("deadline.total")
+        attrs: dict = {}
+        if reason == "shed":
+            ra = self.cfg.overload_retry_after_s
+            self.rejections.append({"rid": rid, "status": RETRY_AFTER,
+                                    "retry_after_s": ra,
+                                    "round": self.round})
+            attrs["retry_after_s"] = ra
+        self._trace("CANCEL", rid, slot=slot, reason=reason,
+                    emitted_tokens=len(self.outputs.get(rid, ())),
+                    pages_held=pages_released, **attrs)
+
+    def _note_deadline_done(self, rid: int, now: float) -> None:
+        """Score a retiring deadline-carrying request: met iff it
+        completed at or before its absolute deadline."""
+        dl = self._deadline_t.pop(rid, None)
+        self._timeout_t.pop(rid, None)
+        if dl is None:
+            return
+        self.metrics.inc("deadline.total")
+        if now <= dl:
+            self.metrics.inc("deadline.met")
+
+    def _expired(self, rid: int, now: float) -> str | None:
+        t = self._timeout_t.get(rid)
+        if t is not None and now > t:
+            return "timeout"
+        d = self._deadline_t.get(rid)
+        if d is not None and now > d:
+            return "deadline"
+        return None
+
+    def _cancel_sweep(self, max_new: int) -> None:
+        """Per-round deadline/timeout enforcement: cancel queued and
+        live requests whose stamp expired, and deadline-carrying ones
+        whose remaining-budget projection (observed TTFT/TPOT means —
+        deliberately optimistic, see ``project_finish_s``) can no longer
+        meet the deadline.  Runs with or without the degradation
+        controller — deadlines are a request property, not a load
+        policy."""
+        if not self._deadline_t and not self._timeout_t:
+            return
+        now = time.perf_counter()
+        for rid, _ in list(self.queue):
+            reason = self._expired(rid, now)
+            if reason is None and rid in self._deadline_t:
+                prior = (len(self.outputs.get(rid, ()))
+                         if rid in self._resumed else 0)
+                proj = project_finish_s(self.metrics,
+                                        max_new - prior, queued=True)
+                if (proj is not None
+                        and now + proj > self._deadline_t[rid]):
+                    reason = "deadline"
+            if reason is not None:
+                self.cancel(rid, reason)
+        for slot, rid in enumerate(self.slot_rid):
+            if rid is None:
+                continue
+            reason = self._expired(rid, now)
+            if (reason is None and rid in self._deadline_t
+                    and not self.slot_pending[slot]):
+                remaining = max(0, self.slot_budget[slot]
+                                - len(self.outputs.get(rid, ())))
+                proj = project_finish_s(self.metrics, remaining,
+                                        queued=False)
+                if (proj is not None
+                        and now + proj > self._deadline_t[rid]):
+                    reason = "deadline"
+            if reason is not None:
+                self._cancel_slot(slot, reason)
+
+    # ------------------------------------------------------------------
+    # degradation controller + progress watchdog (the observe→act loop)
+    # ------------------------------------------------------------------
+    def _overload_round(self) -> None:
+        """Feed the controller this round's burn/pressure signals, trace
+        any ladder transition, and apply the SHEDDING rung (queued-work
+        shedding; the other rungs are consulted where the scheduler
+        reads ``spec_k`` / ``prefill_chunk`` / admission sizing)."""
+        ctl = self.overload
+        slo = self.slo_stats()
+        burn = max(slo["burn_rate_ttft"], slo["burn_rate_tpot"])
+        pressure = self.pool.pressure() if self.pool is not None else 0.0
+        prev = ctl.state
+        state = ctl.observe(burn=burn, pressure=pressure,
+                            queue_depth=len(self.queue),
+                            round=self.round)
+        if state != prev:
+            self.metrics.inc("overload.transitions")
+            self._trace("DEGRADE", None, state=state, prev=prev,
+                        burn=round(burn, 4),
+                        pressure=round(pressure, 4))
+        if ctl.shedding:
+            self._shed_queued()
+
+    def _shed_queued(self) -> None:
+        """SHEDDING's last rung: drain the queue down to
+        ``overload_queue_keep`` (default: one slot-table's worth),
+        lowest priority class first, latest-submitted first within a
+        class, never a preempted resume (its work is already paid for —
+        shedding it would waste the recompute and break the preemption
+        liveness contract).  Every shed answers with a retryable
+        RETRY_AFTER rejection."""
+        keep = self.cfg.overload_queue_keep
+        keep = self.cfg.batch if keep is None else keep
+        while len(self.queue) > keep:
+            cands = [(qi, rid) for qi, (rid, _) in enumerate(self.queue)
+                     if rid not in self._resumed]
+            if not cands:
+                break
+            qi, rid = min(cands, key=lambda c: (
+                self.req_priority.get(c[1], 0), -c[0]))
+            del self.queue[qi]
+            self._finish_cancel(rid, None, "shed")
+
+    def _progress_fingerprint(self) -> tuple:
+        """Monotone progress counters the watchdog compares round over
+        round: any join, committed token, retirement, preemption or
+        cancellation moves at least one of them."""
+        return (self.metrics.count("join.seconds"),
+                int(self.metrics.value("preempt.count")),
+                int(self.metrics.value("cancel.count")),
+                len(self.results),
+                sum(len(o) for o in self.outputs.values()))
+
+    def _watchdog_tick(self) -> None:
+        """Per-round progress check (replaces the idle-spin guard).  On
+        a trip: dump the flight-recorder bundle (the postmortem the old
+        RuntimeError never shipped), trace a WATCHDOG instant, and
+        force-shed the blocking head — the run finishes minus the shed
+        request instead of raising."""
+        if not self.watchdog.tick(self._progress_fingerprint()):
+            return
+        live = sum(1 for r in self.slot_rid if r is not None)
+        err = WatchdogStall(
+            f"no scheduler progress for {self.cfg.watchdog_rounds} "
+            f"rounds at round {self.round}: queue={len(self.queue)} "
+            f"live_slots={live} (livelock/stall — shedding the "
+            "blocking head instead of raising)")
+        self._dump_flight(err)
+        self.metrics.inc("watchdog.trips")
+        self._trace("WATCHDOG", None,
+                    stalled_rounds=self.cfg.watchdog_rounds,
+                    queued=len(self.queue), live_slots=live)
+        self._force_shed()
+
+    def _force_shed(self) -> None:
+        """Shed whatever is blocking the stalled drain: the queue head
+        when work is queued (the request admission cannot place), else
+        the lowest-priority live slot.  Barrier/priority protections do
+        not apply — the alternative is the run never finishing."""
+        if self.queue:
+            rid, _ = self.queue.popleft()
+            self._finish_cancel(rid, None, "shed")
+            return
+        live = [i for i, r in enumerate(self.slot_rid) if r is not None]
+        if live:
+            slot = min(live, key=lambda i: (
+                self.req_priority.get(self.slot_rid[i], 0), i))
+            self._cancel_slot(slot, "shed")
+
+    # ------------------------------------------------------------------
     def _refill(self, max_new: int) -> None:
-        chunk = self.cfg.prefill_chunk
+        chunk = self._effective_chunk()
         round_cap = self.cfg.prefill_round_tokens
         round_used = 0
         # (slot, rid, piece tokens, depth before this piece, commits?)
@@ -843,9 +1190,11 @@ class ContinuousBatcher:
             take.append((slot, rid, piece, mtoks,
                          len(piece) == len(suffix)))
             round_used += len(piece)
-            if self.spec_k:
+            if self._hist_on:
                 # the drafter's lookup corpus: the whole prompt is known
-                # at admission (chunk continuations re-use this row)
+                # at admission (chunk continuations re-use this row) —
+                # kept warm even while the controller sheds speculation,
+                # so a re-enabled drafter reads a correct corpus
                 self.history[slot, :len(p)] = p
         if not take:
             return
@@ -925,7 +1274,7 @@ class ContinuousBatcher:
                 self._slo_observe("ttft", rid, now - self._clock0)
                 self._trace("FIRST_TOKEN", rid, slot=slot, token=tokv,
                             ttft_s=now - self._clock0)
-            if self.spec_k:
+            if self._hist_on:
                 # newest token at position filled: the current token the
                 # next verify step's tail n-gram ends on
                 self.history[slot, self.slot_filled[slot]] = tokv
@@ -935,6 +1284,7 @@ class ContinuousBatcher:
                 self.slot_rid[slot] = None
                 self._resumed.discard(rid)
                 self._preempt_counts.pop(rid, None)
+                self._note_deadline_done(rid, now)
                 tpot = 0.0
                 if (self._clock0 is not None and len(out) > 1
                         and rid in self._first_tok_t):
@@ -988,12 +1338,22 @@ class ContinuousBatcher:
                     burst += 1
                     appended += 1
                     self.slot_len[i] += 1
+                    if (self._hist_on and width == 1
+                            and self.slot_len[i] < self.cfg.max_len):
+                        # plain-loop segment (speculation shed by the
+                        # controller, or spec never carried): the device
+                        # did not advance the history carry, so mirror
+                        # the committed token here — same position
+                        # convention as the spec loop (token at the
+                        # post-advance length)
+                        self.history[i, self.slot_len[i]] = v
                     if ((self.eos is not None and v == self.eos)
                             or len(out) >= self.slot_budget[i]):
                         self.results[rid] = out
                         self.slot_rid[i] = None
                         self._resumed.discard(rid)
                         self._preempt_counts.pop(rid, None)
+                        self._note_deadline_done(rid, now)
                         tpot = 0.0
                         if (self._clock0 is not None and len(out) > 1
                                 and rid in self._first_tok_t):
@@ -1009,7 +1369,7 @@ class ContinuousBatcher:
                             self.metrics.observe("lat.tpot_s", tpot)
                             self._slo_observe("tpot", rid, tpot)
                         break
-                if self.spec_k and burst:
+                if self.spec_k and width > 1 and burst:
                     # one verify step committed ``burst`` tokens: burst-1
                     # drafts were accepted plus the model's bonus token
                     self.metrics.inc("spec.steps")
@@ -1071,7 +1431,7 @@ class ContinuousBatcher:
                     f"{self.pool.pages_for(len(prompt) + max_new + window)}"
                     f" pages, pool holds {self.pool.n_pages} "
                     f"(max {self.pool.max_pages}/slot)")
-        idle_rounds = 0
+        self._max_new = max_new
         tr = self.telemetry
         try:
             while self.queue or any(r is not None for r in self.slot_rid):
@@ -1082,6 +1442,18 @@ class ContinuousBatcher:
                             self.chaos.on_round(self)
                     else:
                         self.chaos.on_round(self)
+                if self.overload is not None:
+                    self._overload_round()
+                self._cancel_sweep(max_new)
+                # progress watchdog (replaces the old idle-spin counter +
+                # RuntimeError): *any* kind of stall — admission spin,
+                # livelock, chaos stall — trips it after watchdog_rounds
+                # rounds with unchanged progress counters, dumps the
+                # flight bundle, and sheds the blocking head so the run
+                # finishes instead of raising
+                self._watchdog_tick()
+                if self.round < self._stall_until:
+                    continue                      # chaos stall: dead round
                 self._refill(max_new)
                 if not any(r is not None and not self.slot_pending[i]
                            for i, r in enumerate(self.slot_rid)):
@@ -1091,22 +1463,8 @@ class ContinuousBatcher:
                     # would only burn a scan on all-done rows
                     if self.queue or any(r is not None
                                          for r in self.slot_rid):
-                        if not any(r is not None for r in self.slot_rid):
-                            # queue blocked with zero live slots:
-                            # admission must succeed within a bounded
-                            # number of rounds (only a chaos hold can
-                            # defer it) — a spin past the bound is a
-                            # deadlock, not a wait
-                            idle_rounds += 1
-                            if idle_rounds > 100_000:
-                                raise RuntimeError(
-                                    "admission stalled: queue non-empty, "
-                                    "no live slots, and 100000 rounds "
-                                    "without progress (pages held "
-                                    "outside the pool?)")
                         continue
                     break
-                idle_rounds = 0
                 # optimistic admission: make every decoding slot's page
                 # table cover this segment's worst-case advance,
                 # preempting on pressure — may evict every decoding slot
@@ -1118,7 +1476,7 @@ class ContinuousBatcher:
                     continue
                 self._sample_kv()
                 seg_t0 = time.perf_counter() if tr is not None else 0.0
-                if self.spec_k:
+                if self._spec_live():
                     cap = self._page_cap()
                     loop = self._loop(steps, cap)
                     pages = jnp.asarray(self.pool.table[:, :cap])
@@ -1283,6 +1641,13 @@ class ContinuousBatcher:
         self.kv_samples = []
         self.preempt_events.clear()
         self.preempted_rids.clear()
+        # overload measurement state resets with the wave; the deadline/
+        # timeout *stamps* are in-flight request bookkeeping and survive
+        # (like _resumed / _preempt_counts above)
+        self.cancelled.clear()
+        self.rejections.clear()
+        if self.overload is not None:
+            self.overload.reset()
 
     def spec_stats(self) -> dict:
         """Self-speculation effectiveness: ``acceptance_rate`` = accepted
@@ -1326,7 +1691,49 @@ class ContinuousBatcher:
                 "queue_wait_p95_s": m.percentile("lat.queue_wait_s", 95),
                 "preemptions": int(m.value("preempt.count")),
                 "preempted_token_recompute":
-                    int(m.value("preempt.recompute_tokens"))}
+                    int(m.value("preempt.recompute_tokens")),
+                "cancellations": int(m.value("cancel.count")),
+                "shed_requests": int(m.value("cancel.shed")),
+                "deadline_met": int(m.value("deadline.met")),
+                "deadline_total": int(m.value("deadline.total")),
+                "deadline_attainment": self._deadline_attainment(),
+                "watchdog_trips": int(m.value("watchdog.trips"))}
+
+    def _deadline_attainment(self) -> float:
+        """Met/total over deadline-carrying requests that were *scored*:
+        retired (met iff on time) or cancelled for deadline/timeout
+        (always a miss).  Shed and client cancels are excluded — a
+        RETRY_AFTER rejection is a fast answer, not a latency violation.
+        Vacuously 1.0 with no deadlines in play."""
+        total = int(self.metrics.value("deadline.total"))
+        met = int(self.metrics.value("deadline.met"))
+        return met / total if total else 1.0
+
+    def overload_stats(self) -> dict:
+        """One dict for the overload-protection story: cancellation and
+        shed tallies, deadline attainment, watchdog trips, the RETRY_AFTER
+        rejection ledger, and the degradation controller's state machine
+        (state, time-in-state, transition history, whether it recovered
+        to HEALTHY).  Controller-off runs report HEALTHY with zero
+        time-in-state, so the dict is reportable either way."""
+        m = self.metrics
+        if self.overload is not None:
+            ctl = self.overload.stats()
+        else:
+            ctl = {"state": HEALTHY, "recovered_to_healthy": False,
+                   "transitions": [],
+                   "time_in_state": {s: 0.0 for s in STATES}}
+        return {"enabled": self.overload is not None,
+                "cancellations": int(m.value("cancel.count")),
+                "cancelled_by_reason": {
+                    r: int(m.value(f"cancel.{r}")) for r in CANCEL_REASONS},
+                "shed_requests": int(m.value("cancel.shed")),
+                "deadline_met": int(m.value("deadline.met")),
+                "deadline_total": int(m.value("deadline.total")),
+                "deadline_attainment": self._deadline_attainment(),
+                "watchdog_trips": int(m.value("watchdog.trips")),
+                "rejections": list(self.rejections),
+                "controller": ctl}
 
     def slo_stats(self, window: int = 64) -> dict:
         """SLO attainment and burn rate against ``cfg.ttft_slo_s`` /
@@ -1391,7 +1798,11 @@ class ContinuousBatcher:
         preempted has retired with a result (vacuously True with no
         preemptions; the liveness gate pairs it with
         ``preemptions > 0``)."""
-        ok = all(rid in self.results and rid not in self._resumed
+        # a preempted-then-cancelled request is accounted for (its pages
+        # were released and it reached a terminal state) even though it
+        # never produced a result
+        ok = all((rid in self.results or rid in self.cancelled)
+                 and rid not in self._resumed
                  for rid in self.preempted_rids)
         return {"enabled": self.cfg.admission_mode == "optimistic",
                 "preemptions": self.preemptions,

@@ -12,7 +12,8 @@ event-level instrumentation; this module is that layer, in two parts:
 **Tracer** — typed per-request lifecycle events
 
     SUBMIT -> ADMIT -> PREFILL_CHUNK x n -> FIRST_TOKEN
-           -> SPEC_COMMIT x n -> (PREEMPT -> RESUME ->) ... -> RETIRE
+           -> SPEC_COMMIT x n -> (PREEMPT -> RESUME ->) ...
+           -> RETIRE | CANCEL(reason=deadline|timeout|shed|client)
 
 each stamped with the scheduling round, slot id, pages held by that slot
 and the pool's free-page count at the instant of the event, plus
@@ -228,11 +229,20 @@ class MetricsRegistry:
 
 
 # typed lifecycle event kinds (the trace-completeness tests enumerate
-# these — a new kind needs a track assignment in ``to_perfetto``)
+# these — a new kind needs a track assignment in ``to_perfetto``).
+# CANCEL is a terminal state like RETIRE: it closes the rid's queue span
+# (a queued cancel) or its slot span (a mid-flight cancel) and carries a
+# ``reason`` attr from repro.serve.overload.CANCEL_REASONS.
 LIFECYCLE_KINDS = ("SUBMIT", "ADMIT", "RESUME", "PREFILL_CHUNK",
-                   "FIRST_TOKEN", "SPEC_COMMIT", "PREEMPT", "RETIRE")
+                   "FIRST_TOKEN", "SPEC_COMMIT", "PREEMPT", "CANCEL",
+                   "RETIRE")
+# scheduler-global control-plane instants (rid=None -> scheduler track):
+# DEGRADE marks a degradation-ladder transition, WATCHDOG a progress
+# watchdog trip (flight bundle dumped, blocking head force-shed)
+CONTROL_KINDS = ("DEGRADE", "WATCHDOG")
 CHAOS_KINDS = ("CHAOS_HOLD", "CHAOS_RELEASE_HELD", "CHAOS_SLOT_FAILURE",
-               "CHAOS_SLOT_FAILURE_NOOP", "CHAOS_VICTIM_OVERRIDE")
+               "CHAOS_SLOT_FAILURE_NOOP", "CHAOS_VICTIM_OVERRIDE",
+               "CHAOS_STALL", "CHAOS_BURST")
 
 _PID = 1
 _TID_SCHED = 0          # scheduler spans + chaos instants
@@ -405,7 +415,10 @@ class Tracer:
                     ev.append({"name": f"queued rid {rid}", "cat": "queue",
                                "ph": "b", "id": rid, "pid": _PID,
                                "tid": _TID_QUEUE, "ts": ts, "args": args})
-                elif kind == "ADMIT" and rid in open_queue:
+                elif (kind in ("ADMIT", "CANCEL") and rid in open_queue):
+                    # ADMIT moves the request onto a slot; a queued
+                    # CANCEL (deadline/timeout/shed before admission)
+                    # ends its residency without one
                     open_queue.discard(rid)
                     ev.append({"name": f"queued rid {rid}", "cat": "queue",
                                "ph": "e", "id": rid, "pid": _PID,
@@ -414,7 +427,7 @@ class Tracer:
                 if kind == "ADMIT":
                     close_slot(slot, ts, "lost")     # defensive: no-op
                     open_slot[slot] = {"rid": rid, "t0": ts}
-                elif kind in ("PREEMPT", "RETIRE"):
+                elif kind in ("PREEMPT", "RETIRE", "CANCEL"):
                     close_slot(slot, ts, kind)
         for slot in list(open_slot):
             close_slot(slot, t_end, "open")          # still live at export
